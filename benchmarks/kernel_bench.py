@@ -1,0 +1,53 @@
+"""Pallas-kernel parity microbench: wall time of the interpret-mode kernel
+vs the jnp oracle on CPU (TPU timings require hardware; interpret mode
+validates numerics + BlockSpec indexing).  derived = max |err| vs oracle."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    # p2p
+    q = jnp.asarray(rng.uniform(-1, 1, (4, 128)), jnp.float32)
+    xs = jnp.asarray(rng.uniform(-1, 1, (4, 128, 3)), jnp.float32)
+    xt = jnp.asarray(rng.uniform(-1, 1, (4, 128, 3)), jnp.float32)
+    us = _time(ops.p2p_blocked, q, xs, xt)
+    err = float(jnp.max(jnp.abs(ops.p2p_blocked(q, xs, xt) - ref.p2p_ref(q, xs, xt))))
+    rows.append(("kernel_p2p_4x128", us, f"max_err={err:.2e}"))
+    # flash attention
+    qa = jnp.asarray(rng.normal(size=(1, 4, 256, 64)), jnp.float32)
+    ka = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    va = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    us = _time(lambda a, b, c: ops.flash_attention(a, b, c), qa, ka, va)
+    err = float(jnp.max(jnp.abs(ops.flash_attention(qa, ka, va)
+                                - ref.attention_ref(qa, ka, va))))
+    rows.append(("kernel_flash_attn_gqa", us, f"max_err={err:.2e}"))
+    # rwkv
+    r = jnp.asarray(rng.normal(size=(2, 128, 64)) * 0.5, jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 128, 64)) * 0.5, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 128, 64)) * 0.5, jnp.float32)
+    w = jnp.asarray(rng.uniform(0.9, 0.999, (2, 128, 64)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(2, 64)) * 0.1, jnp.float32)
+    s0 = jnp.zeros((2, 64, 64), jnp.float32)
+    us = _time(lambda *a: ops.rwkv6_wkv(*a)[0], r, k, v, w, u, s0)
+    y1, _ = ops.rwkv6_wkv(r, k, v, w, u, s0)
+    y2, _ = ref.wkv_ref(r, k, v, w, u, s0)
+    rows.append(("kernel_rwkv6_wkv", us, f"max_err={float(jnp.max(jnp.abs(y1-y2))):.2e}"))
+    return rows

@@ -1,0 +1,38 @@
+"""Fig 3 / §2.2: Hilbert-interval partitions of boundary distributions are
+spatially discontinuous; hybrid ORB partitions are compact.  The derived
+column is the mean connected components per partition (1.0 = compact) and
+the total LET bytes each scheme induces."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.distributed_fmm import run_distributed_fmm
+from repro.core.distributions import make_distribution
+from repro.core.partition.hot import hot_partition
+from repro.core.partition.metrics import partition_report
+from repro.core.partition.orb import orb_partition
+
+
+def run(n: int = 6000, nparts: int = 16):
+    rows = []
+    for dist in ("sphere", "ellipsoid", "cube"):
+        x = make_distribution(dist, n, seed=3)
+        q = np.ones(n) / n
+        for method in ("hilbert", "morton", "orb"):
+            t0 = time.time()
+            if method == "orb":
+                part, _ = orb_partition(x, nparts)
+            else:
+                part, _ = hot_partition(x, nparts, curve=method)
+            dt = (time.time() - t0) * 1e6
+            rep = partition_report(x, part, nparts)
+            res = run_distributed_fmm(x, q, nparts=min(nparts, 8),
+                                      method=method, protocol="alltoallv",
+                                      check_delivery=False)
+            rows.append((f"partition_{dist}_{method}", dt,
+                         f"components={rep['mean_components']:.2f}"
+                         f";balance={rep['balance']:.3f}"
+                         f";let_MB={res.bytes_matrix.sum()/1e6:.2f}"))
+    return rows

@@ -1,0 +1,30 @@
+"""Roofline terms per (arch x shape) from the dry-run artifacts (if present).
+derived = the three terms + dominant bottleneck.  Run the dry-run first:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all
+"""
+from __future__ import annotations
+
+import os
+
+from repro.analysis.roofline import load_artifacts, roofline_from_artifact
+
+ART = os.environ.get("REPRO_ARTIFACTS", "artifacts")
+
+
+def run():
+    rows = []
+    if not os.path.isdir(ART):
+        return [("roofline_table", 0.0, "no artifacts dir — run dryrun first")]
+    for rec in load_artifacts(ART, pattern="__1pod"):
+        if "error" in rec or "skipped" in rec:
+            continue
+        r = roofline_from_artifact(rec, rec.get("walked")
+                                    if "dot_flops" in rec.get("walked", {}) else None)
+        rows.append((f"roofline_{rec['arch']}_{rec['shape']}",
+                     rec["compile_s"] * 1e6,
+                     f"compute={r['compute_s']*1e3:.2f}ms;"
+                     f"mem={r['memory_s']*1e3:.2f}ms;"
+                     f"coll={r['collective_s']*1e3:.2f}ms;"
+                     f"dominant={r['dominant']};"
+                     f"frac={r['roofline_fraction']:.2f}"))
+    return rows or [("roofline_table", 0.0, "no artifacts found")]

@@ -1,0 +1,36 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import sys
+import traceback
+
+from benchmarks import (fig6_granularity, fig7_protocols, fig8_weak,
+                        kernel_bench, partition_quality, roofline_table,
+                        table3_hsdx)
+
+MODULES = [
+    ("partition_quality (Fig 3 / §2.2)", partition_quality),
+    ("fig6_granularity (Fig 6)", fig6_granularity),
+    ("table3_hsdx (Table 3)", table3_hsdx),
+    ("fig7_protocols (Fig 7)", fig7_protocols),
+    ("fig8_weak (Fig 8)", fig8_weak),
+    ("kernel_bench (P2P/attn/WKV)", kernel_bench),
+    ("roofline_table (§Roofline)", roofline_table),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for label, mod in MODULES:
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception:
+            failures += 1
+            print(f"{label},-1,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

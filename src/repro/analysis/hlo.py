@@ -1,0 +1,70 @@
+"""Post-partitioning HLO analysis: collective bytes per category.
+
+cost_analysis() gives FLOPs and memory bytes but NOT collective traffic; we
+parse the compiled module text and sum operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.  Shapes in the
+post-SPMD module are PER-DEVICE, so the sums are per-device wire bytes.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  "bf16[16,1024,128]{...}" — first shape on the line is the result
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?\S+\s*=\s*(?:\(([^)]*)\)|(\S+?))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved by each collective category (result sizes).
+    -start/-done pairs are counted once (the -start carries the shape)."""
+    out = defaultdict(int)
+    counts = defaultdict(int)
+    for line in hlo_text.splitlines():
+        stripped = line.lstrip()
+        if "-done(" in stripped:
+            continue  # counted at -start
+        m = re.match(r"^(?:ROOT\s+)?%?\S+\s*=\s*(.*)$", stripped)
+        if not m:
+            continue
+        rhs = m.group(1)
+        for cname in _COLLECTIVES:
+            # match "<shape> <collective>(" or "(<tuple shapes>) <collective>("
+            idx = rhs.find(f" {cname}(")
+            if idx < 0:
+                idx = rhs.find(f") {cname}(")
+                if idx >= 0:
+                    idx += 1
+            if idx >= 0:
+                shape_part = rhs[:idx]
+                b = _shape_bytes(shape_part)
+                out[cname] += b
+                counts[cname] += 1
+                break
+    return {"bytes": dict(out), "counts": dict(counts),
+            "total_bytes": sum(out.values())}

@@ -1,0 +1,111 @@
+"""Three-term roofline from dry-run artifacts (TPU v5e targets).
+
+    compute term    = FLOPs_per_device / peak_FLOPs
+    memory term     = HBM_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / (links * link_bw)
+
+FLOPs source: trip-count-corrected dot FLOPs walked from the compiled HLO
+(analysis.hlo_walk) — XLA's cost_analysis counts while bodies once, so the
+raw number is also recorded for comparison.  Memory bytes: 2x the weighted
+top-level result bytes (reads ~ writes) from the same walk.  Collective
+bytes: weighted result sizes of all-gather/all-reduce/reduce-scatter/
+all-to-all/collective-permute (per-device, post-partitioning shapes).
+
+MODEL_FLOPS = 6 N D (train) / 2 N D (inference) per token with N = active
+params; the ratio MODEL_FLOPS / HLO_FLOPs measures how much compiled compute
+is "useful" (remat recompute, capacity-factor waste, causal-mask overcount
+all show up here).
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s
+LINK_BW = 50e9               # B/s per ICI link
+N_LINKS = 3                  # usable links/chip on a v5e 2D torus (conservative)
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def fraction_of_roofline(self) -> float:
+        """compute_time / bound_time: 1.0 = perfectly compute-bound."""
+        return self.compute_s / max(self.bound_s, 1e-30)
+
+
+def model_flops_per_step(rec: dict) -> float:
+    """6*N_active*D for train, 2*N_active*D for inference (whole step,
+    all devices)."""
+    n_act = rec["active_params"]
+    shape = rec["shape"]
+    from repro.configs import SHAPES
+    sh = SHAPES[shape]
+    if sh.kind == "train":
+        tokens = sh.global_batch * sh.seq_len
+        return 6.0 * n_act * tokens
+    if sh.kind == "prefill":
+        tokens = sh.global_batch * sh.seq_len
+        return 2.0 * n_act * tokens
+    tokens = sh.global_batch          # one token per sequence
+    return 2.0 * n_act * tokens
+
+
+def roofline_from_artifact(rec: dict, walked: dict | None = None) -> dict:
+    n_chips = 1
+    for d in rec["mesh"]:
+        n_chips *= d
+    if walked is not None:
+        flops_dev = walked["dot_flops"]
+        mem_dev = walked.get("result_bytes", 0.0) * 2.0
+        coll_dev = walked["total_collective_bytes"]
+    else:
+        flops_dev = rec.get("flops") or 0.0
+        mem_dev = rec.get("bytes_accessed") or 0.0
+        coll_dev = rec["collectives"]["total_bytes"]
+    r = Roofline(
+        compute_s=flops_dev / PEAK_FLOPS,
+        memory_s=mem_dev / HBM_BW,
+        collective_s=coll_dev / (N_LINKS * LINK_BW),
+    )
+    mflops = model_flops_per_step(rec)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "mesh": "x".join(map(str, rec["mesh"])),
+        "compute_s": r.compute_s, "memory_s": r.memory_s,
+        "collective_s": r.collective_s, "dominant": r.dominant,
+        "bound_s": r.bound_s,
+        "roofline_fraction": r.fraction_of_roofline,
+        "model_flops": mflops,
+        "hlo_flops_dev": flops_dev,
+        "useful_ratio": mflops / max(flops_dev * n_chips, 1e-30),
+        "collective_GB_dev": coll_dev / 1e9,
+        "mem_GB_args": rec["memory"].get("argument_size_in_bytes", 0) / 1e9,
+        "mem_GB_temp": rec["memory"].get("temp_size_in_bytes", 0) / 1e9,
+    }
+
+
+def load_artifacts(art_dir: str, pattern: str = "") -> list[dict]:
+    out = []
+    for f in sorted(os.listdir(art_dir)):
+        if not f.endswith(".json") or pattern not in f:
+            continue
+        with open(os.path.join(art_dir, f)) as fh:
+            out.append(json.load(fh))
+    return out

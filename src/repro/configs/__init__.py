@@ -1,0 +1,33 @@
+"""Architecture registry: --arch <id> resolves here."""
+from __future__ import annotations
+
+from importlib import import_module
+
+from repro.configs.base import (SHAPES, ModelConfig, ShapeConfig, cell_enabled,
+                                input_specs, param_count, active_param_count)
+
+_ARCH_MODULES = {
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "smollm-360m": "smollm_360m",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "gemma3-12b": "gemma3_12b",
+    "llama-3.2-vision-90b": "llama32_vision_90b",
+    "hymba-1.5b": "hymba_1_5b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "dbrx-132b": "dbrx_132b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+}
+
+
+def list_archs() -> list[str]:
+    return list(_ARCH_MODULES)
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    mod = import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]

@@ -1,0 +1,16 @@
+"""The paper's primary contribution, as composable JAX modules.
+
+    multipole.py       Cartesian Taylor FMM operators (AD-built M2L tensors)
+    tree.py            adaptive octree with tight (squeezed) cell boxes
+    traversal.py       dual-tree MAC traversal (+ LET M2P fallback)
+    fmm.py             bucketed, jitted evaluator; O(N^2) oracle
+    distributions.py   cube / sphere / ellipsoid / plummer workloads
+    partition/         Morton + Skilling-Hilbert SFC, HOT histogram splits,
+                       hybrid ORB multisection, quality metrics
+    let.py             sender-initiated LET extraction + grafting (§3)
+    hsdx.py            Lemma-1 adjacency, balanced BFS comm trees, Eq (1)
+    protocols.py       alltoallv / NBX / pairwise / HSDX schedules + LogGP
+    collectives.py     device-level patterns: ring AG/RS, hierarchical AR,
+                       two-stage a2a, grain-chunked overlap, grid exchange
+    distributed_fmm.py multi-partition FMM under any protocol
+"""

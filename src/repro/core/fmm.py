@@ -1,0 +1,253 @@
+"""Single-partition FMM evaluator: host-built tree/lists + JAX arithmetic.
+
+The numeric passes (P2M, M2M, M2L, L2L, L2P, P2P) run as *jitted, bucketed*
+vmaps over padded index lists: all list lengths are padded to power-of-two
+buckets so the JIT cache is shared across trees, partitions and LET pairs
+(tree shapes vary; the compiled kernels must not).  The P2P hot spot can
+route through the Pallas kernel (repro.kernels) — the jnp path is the CPU
+reference.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.multipole import MultipoleOperators, get_operators
+from repro.core.traversal import dual_traversal
+from repro.core.tree import Tree, build_tree
+
+__all__ = ["fmm_potential", "evaluate", "direct_potential", "upward_pass",
+           "downward_pass", "m2l_pass", "p2p_pass", "m2p_pass", "l2p_pass"]
+
+
+def direct_potential(x, q, x_tgt=None, chunk: int = 2048) -> np.ndarray:
+    """O(N^2) float64 oracle (self-interaction excluded)."""
+    x = np.asarray(x, dtype=np.float64)
+    q = np.asarray(q, dtype=np.float64)
+    xt = x if x_tgt is None else np.asarray(x_tgt, dtype=np.float64)
+    out = np.zeros(len(xt))
+    for s in range(0, len(xt), chunk):
+        d = xt[s:s + chunk, None, :] - x[None, :, :]
+        r2 = (d ** 2).sum(-1)
+        inv = np.where(r2 > 0, 1.0 / np.sqrt(np.maximum(r2, 1e-300)), 0.0)
+        out[s:s + chunk] = inv @ q
+    return out
+
+
+# --------------------------------------------------------- bucketing -------
+def _bucket(n: int, lo: int = 16) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+def _pad_pairs(pairs: np.ndarray):
+    """Pad pair lists to power-of-2 buckets so the vmapped kernels hit the
+    JIT cache across trees/partitions."""
+    n = len(pairs)
+    m = _bucket(max(n, 1))
+    # pad by replicating the first pair: keeps indices valid (root cells can
+    # be huge) and keeps m2l displacements nonzero; masks zero the values
+    out = np.tile(pairs[0], (m, 1)).astype(np.int64) if n else np.zeros((m, 2), np.int64)
+    out[:n] = pairs
+    mask = np.zeros(m, dtype=np.float32)
+    mask[:n] = 1.0
+    return out, mask
+
+
+def _pad_ids(ids: np.ndarray, pad_value: int | None = None):
+    n = len(ids)
+    m = _bucket(max(n, 1))
+    fill = (ids[0] if (pad_value is None and n) else (pad_value or 0))
+    out = np.full(m, fill, dtype=np.int64)
+    out[:n] = ids
+    mask = np.zeros(m, dtype=np.float32)
+    mask[:n] = 1.0
+    return out, mask
+
+
+def _pad_bodies(tree, cells: np.ndarray, width: int | None = None):
+    """(len(cells), width) body index (into sorted arrays), -1 padded."""
+    width = width or max(int(tree.ncrit), 1)
+    out = -np.ones((len(cells), width), dtype=np.int64)
+    for i, c in enumerate(cells):
+        s, n = tree.body_start[c], tree.n_body[c]
+        out[i, :n] = np.arange(s, s + n)
+    return out
+
+
+# ----------------------------------------------------- jitted kernels ------
+@partial(jax.jit, static_argnums=(0,), static_argnames=("n_cells",))
+def _p2m_scatter(ops, q, x, centers, leaf_ids, mask, n_cells):
+    M_leaf = jax.vmap(ops.p2m)(q, x, centers) * mask[:, None]
+    return jnp.zeros((n_cells, ops.nk), jnp.float32).at[leaf_ids].add(M_leaf)
+
+
+@partial(jax.jit, static_argnums=(0,))
+def _m2m_scatter(ops, M, M_child, d, parents, mask):
+    contrib = jax.vmap(ops.m2m)(M_child, d) * mask[:, None]
+    return M.at[parents].add(contrib)
+
+
+@partial(jax.jit, static_argnums=(0,), static_argnames=("n_cells",))
+def _m2l_scatter(ops, M_src, d, a, mask, n_cells):
+    contrib = jax.vmap(ops.m2l)(M_src, d) * mask[:, None]
+    return jnp.zeros((n_cells, ops.nk), M_src.dtype).at[a].add(contrib)
+
+
+@partial(jax.jit, static_argnums=(0,))
+def _l2l_scatter(ops, L, L_parent, d, ids, mask):
+    contrib = jax.vmap(ops.l2l)(L_parent, d) * mask[:, None]
+    return L.at[ids].add(contrib)
+
+
+@partial(jax.jit, static_argnums=(0,))
+def _l2p_vals(ops, L_leaf, y, centers, mask):
+    return jax.vmap(ops.l2p)(L_leaf, y, centers) * mask[:, None]
+
+
+@partial(jax.jit, static_argnums=(0,))
+def _m2p_vals(ops, M, y, centers, mask):
+    return jax.vmap(ops.m2p)(M, y, centers) * mask[:, None]
+
+
+@jax.jit
+def _p2p_vals(xt, xs, qs, mask):
+    d = xt[:, :, None, :] - xs[:, None, :, :]
+    r2 = (d * d).sum(-1)
+    inv = jnp.where(r2 > 0, jax.lax.rsqrt(jnp.maximum(r2, 1e-30)), 0.0)
+    return jnp.einsum("pts,ps->pt", inv, qs) * mask[:, None]
+
+
+# ------------------------------------------------------------- passes ------
+def upward_pass(tree: Tree, ops: MultipoleOperators) -> jnp.ndarray:
+    """P2M at leaves, then M2M level-by-level (deepest first). -> (C, nk)."""
+    x = jnp.asarray(tree.x, jnp.float32)
+    q = jnp.asarray(tree.q, jnp.float32)
+    leaves, lmask = _pad_ids(tree.leaves)
+    pad = _pad_bodies(tree, leaves)
+    safe = np.where(pad < 0, 0, pad)
+    xi = x[jnp.asarray(safe)]
+    qi = jnp.where(jnp.asarray(pad >= 0), q[jnp.asarray(safe)], 0.0)
+    centers = jnp.asarray(tree.center[leaves], jnp.float32)
+    M = _p2m_scatter(ops, qi, xi, centers, jnp.asarray(leaves),
+                     jnp.asarray(lmask), n_cells=tree.n_cells)
+
+    for ids in tree.levels_desc():
+        ids = ids[ids != 0]
+        if len(ids) == 0:
+            continue
+        ids_p, mask = _pad_ids(ids)
+        pa = tree.parent[ids_p]
+        d = jnp.asarray((tree.center[ids_p] - tree.center[pa]).astype(np.float32))
+        M = _m2m_scatter(ops, M, M[jnp.asarray(ids_p)], d, jnp.asarray(pa),
+                         jnp.asarray(mask))
+    return M
+
+
+def m2l_pass(ops, M, tgt_tree, src_tree, pairs) -> jnp.ndarray:
+    M = jnp.asarray(M, jnp.float32)
+    if len(pairs) == 0:
+        return jnp.zeros((tgt_tree.n_cells, ops.nk), jnp.float32)
+    pairs, mask = _pad_pairs(pairs)
+    a, b = pairs[:, 0], pairs[:, 1]
+    d = jnp.asarray((tgt_tree.center[a] - src_tree.center[b]).astype(np.float32))
+    return _m2l_scatter(ops, M[jnp.asarray(b)], d, jnp.asarray(a),
+                        jnp.asarray(mask), n_cells=tgt_tree.n_cells)
+
+
+def downward_pass(tree: Tree, ops, L) -> jnp.ndarray:
+    max_lvl = int(tree.level.max())
+    for lvl in range(1, max_lvl + 1):
+        ids = np.nonzero(tree.level == lvl)[0]
+        if len(ids) == 0:
+            continue
+        ids_p, mask = _pad_ids(ids)
+        pa = tree.parent[ids_p]
+        d = jnp.asarray((tree.center[ids_p] - tree.center[pa]).astype(np.float32))
+        L = _l2l_scatter(ops, L, L[jnp.asarray(pa)], d, jnp.asarray(ids_p),
+                         jnp.asarray(mask))
+    return L
+
+
+def l2p_pass(tree: Tree, ops, L) -> np.ndarray:
+    leaves, lmask = _pad_ids(tree.leaves)
+    pad = _pad_bodies(tree, leaves)
+    safe = np.where(pad < 0, 0, pad)
+    y = jnp.asarray(tree.x, jnp.float32)[jnp.asarray(safe)]
+    centers = jnp.asarray(tree.center[leaves], jnp.float32)
+    vals = _l2p_vals(ops, L[jnp.asarray(leaves)], y, centers, jnp.asarray(lmask))
+    phi = np.zeros(len(tree.x))
+    np.add.at(phi, safe.ravel(),
+              np.where(pad.ravel() < 0, 0.0, np.asarray(vals, np.float64).ravel()))
+    return phi
+
+
+def p2p_pass(tgt_tree: Tree, src_tree, pairs, use_pallas: bool = False) -> np.ndarray:
+    phi = np.zeros(len(tgt_tree.x))
+    if len(pairs) == 0:
+        return phi
+    pairs, mask = _pad_pairs(pairs)
+    tp = _pad_bodies(tgt_tree, pairs[:, 0])
+    sp = _pad_bodies(src_tree, pairs[:, 1], width=max(int(src_tree.ncrit), 1))
+    safe_t = np.where(tp < 0, 0, tp)
+    safe_s = np.where(sp < 0, 0, sp)
+    xt = jnp.asarray(tgt_tree.x, jnp.float32)[jnp.asarray(safe_t)]
+    xs = jnp.asarray(src_tree.x, jnp.float32)[jnp.asarray(safe_s)]
+    qs = jnp.where(jnp.asarray(sp >= 0),
+                   jnp.asarray(src_tree.q, jnp.float32)[jnp.asarray(safe_s)], 0.0)
+    if use_pallas:
+        from repro.kernels.ops import p2p_blocked
+        vals = np.asarray(p2p_blocked(qs, xs, xt)) * mask[:, None]
+    else:
+        vals = np.asarray(_p2p_vals(xt, xs, qs, jnp.asarray(mask)))
+    np.add.at(phi, safe_t.ravel(),
+              np.where(tp.ravel() < 0, 0.0, vals.astype(np.float64).ravel()))
+    return phi
+
+
+def m2p_pass(tgt_tree: Tree, src_M, src_centers, pairs, p: int = 4) -> np.ndarray:
+    """Direct multipole evaluation at leaf bodies (LET fallback for truncated
+    remote cells that fail the MAC against a large local leaf)."""
+    ops = get_operators(p)
+    phi = np.zeros(len(tgt_tree.x))
+    if len(pairs) == 0:
+        return phi
+    pairs, mask = _pad_pairs(pairs)
+    tp = _pad_bodies(tgt_tree, pairs[:, 0])
+    safe = np.where(tp < 0, 0, tp)
+    y = jnp.asarray(tgt_tree.x, jnp.float32)[jnp.asarray(safe)]
+    M = jnp.asarray(src_M, jnp.float32)[jnp.asarray(pairs[:, 1])]
+    centers = jnp.asarray(src_centers, jnp.float32)[jnp.asarray(pairs[:, 1])]
+    vals = np.asarray(_m2p_vals(ops, M, y, centers, jnp.asarray(mask)))
+    np.add.at(phi, safe.ravel(),
+              np.where(tp.ravel() < 0, 0.0, vals.astype(np.float64).ravel()))
+    return phi
+
+
+def evaluate(tgt_tree: Tree, src_tree: Tree, theta: float = 0.5, p: int = 4,
+             m2l_pairs=None, p2p_pairs=None, use_pallas: bool = False) -> np.ndarray:
+    """Potential at tgt_tree bodies (sorted order) due to src_tree bodies."""
+    ops = get_operators(p)
+    if m2l_pairs is None or p2p_pairs is None:
+        m2l_pairs, p2p_pairs = dual_traversal(tgt_tree, src_tree, theta)
+    M = upward_pass(src_tree, ops)
+    L = m2l_pass(ops, M, tgt_tree, src_tree, m2l_pairs)
+    L = downward_pass(tgt_tree, ops, L)
+    phi = l2p_pass(tgt_tree, ops, L)
+    phi += p2p_pass(tgt_tree, src_tree, p2p_pairs, use_pallas=use_pallas)
+    return phi
+
+
+def fmm_potential(x, q, theta: float = 0.5, ncrit: int = 64, p: int = 4,
+                  use_pallas: bool = False) -> np.ndarray:
+    """FMM potential in the *original* body order."""
+    tree = build_tree(x, q, ncrit=ncrit)
+    phi_sorted = evaluate(tree, tree, theta=theta, p=p, use_pallas=use_pallas)
+    out = np.empty_like(phi_sorted)
+    out[tree.perm] = phi_sorted
+    return out

@@ -1,0 +1,153 @@
+"""Local essential tree (LET): sender-initiated extraction + grafting (§3).
+
+Each partition owns a *completely local* tree (built from the local bounding
+box — no global key).  For every remote partition box, the sender traverses
+its own tree and ships the minimal subtree:
+
+  - a cell is ACCEPTED (shipped as a truncated multipole leaf, recursion
+    stops) iff      2 * R_cell < theta * dist(center, remote_box)
+    — conservative enough that the receiver's dual traversal never needs the
+    cell's children (see traversal.dual_traversal docstring for the bound);
+  - a leaf that fails the criterion ships its bodies (P2P near the boundary);
+  - interior cells that fail ship geometry only (structure for the receiver's
+    traversal) and recurse.
+
+The receiver *grafts* the received subtree roots — the global tree is never
+materialized (the paper's simplification that keeps the serial code reusable).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.multipole import MultipoleOperators
+from repro.core.tree import Tree
+
+__all__ = ["LETData", "extract_let", "graft", "let_nbytes",
+           "CELL_BYTES", "BODY_BYTES"]
+
+# wire format: center(3f8) + radius(f8) + M(20f8) + 4 structure int32s
+CELL_BYTES = (3 + 1 + 20) * 8 + 16
+BODY_BYTES = 4 * 8          # x(3f8) + q(f8)
+
+
+@dataclass
+class LETData:
+    """A pruned subtree (what one partition sends to one other partition)."""
+    center: np.ndarray       # (S, 3)
+    radius: np.ndarray       # (S,)
+    M: np.ndarray            # (S, nk) multipoles
+    child_start: np.ndarray  # (S,)
+    n_child: np.ndarray      # (S,)
+    body_start: np.ndarray   # (S,)
+    n_body: np.ndarray       # (S,)
+    truncated: np.ndarray    # (S,) bool — multipole-sufficient leaf
+    x: np.ndarray            # (B, 3) shipped bodies
+    q: np.ndarray            # (B,)
+
+    @property
+    def n_cells(self) -> int:
+        return len(self.radius)
+
+    @property
+    def nbytes(self) -> int:
+        return self.n_cells * CELL_BYTES + len(self.q) * BODY_BYTES
+
+
+def _dist_point_box(p: np.ndarray, box_lo: np.ndarray, box_hi: np.ndarray) -> float:
+    d = np.maximum(np.maximum(box_lo - p, p - box_hi), 0.0)
+    return float(np.linalg.norm(d))
+
+
+def extract_let(tree: Tree, M: np.ndarray, box_lo, box_hi,
+                theta: float = 0.5) -> LETData:
+    """Sender-side LET extraction for one remote partition box."""
+    M = np.asarray(M)
+    box_lo = np.asarray(box_lo, dtype=np.float64)
+    box_hi = np.asarray(box_hi, dtype=np.float64)
+
+    # BFS so that every cell's children are CONTIGUOUS in the output arrays
+    # (the traversal contract: children = child_start .. child_start+n_child)
+    from collections import deque
+    cells = [dict(src=0, child_start=0, n_child=0, body_start=0,
+                  n_body=0, truncated=False)]
+    bodies_x, bodies_q = [], []
+    n_bodies = 0
+    queue = deque([0])          # output indices awaiting expansion
+    while queue:
+        out = queue.popleft()
+        c = cells[out]["src"]
+        dist = _dist_point_box(tree.center[c], box_lo, box_hi)
+        if 2.0 * tree.radius[c] < theta * dist and c != 0:
+            cells[out]["truncated"] = True
+            continue
+        if tree.n_child[c] == 0:
+            # boundary leaf: ship bodies
+            s, nb = tree.body_start[c], tree.n_body[c]
+            cells[out]["body_start"] = n_bodies
+            cells[out]["n_body"] = int(nb)
+            n_bodies += int(nb)
+            bodies_x.append(tree.x[s:s + nb])
+            bodies_q.append(tree.q[s:s + nb])
+            continue
+        first = len(cells)
+        nc = int(tree.n_child[c])
+        for k in range(tree.child_start[c], tree.child_start[c] + nc):
+            cells.append(dict(src=int(k), child_start=0, n_child=0,
+                              body_start=0, n_body=0, truncated=False))
+            queue.append(len(cells) - 1)
+        cells[out]["child_start"] = first
+        cells[out]["n_child"] = nc
+
+    src = np.array([c["src"] for c in cells], dtype=np.int64)
+    return LETData(
+        center=tree.center[src].copy(),
+        radius=tree.radius[src].copy(),
+        M=M[src].copy(),
+        child_start=np.array([c["child_start"] for c in cells], dtype=np.int64),
+        n_child=np.array([c["n_child"] for c in cells], dtype=np.int64),
+        body_start=np.array([c["body_start"] for c in cells], dtype=np.int64),
+        n_body=np.array([c["n_body"] for c in cells], dtype=np.int64),
+        truncated=np.array([c["truncated"] for c in cells], dtype=bool),
+        x=(np.concatenate(bodies_x) if bodies_x else np.zeros((0, 3))),
+        q=(np.concatenate(bodies_q) if bodies_q else np.zeros((0,))),
+    )
+
+
+def let_nbytes(let: LETData) -> int:
+    return let.nbytes
+
+
+class _GraftedTree:
+    """Tree-like view over a received LETData (duck-typed for traversal)."""
+
+    def __init__(self, let: LETData):
+        self.center = let.center
+        self.radius = let.radius
+        self.child_start = let.child_start
+        self.n_child = let.n_child
+        self.body_start = let.body_start
+        self.n_body = let.n_body
+        self.truncated = let.truncated
+        self.x = let.x
+        self.q = let.q
+        self.M = let.M
+        self.ncrit = int(let.n_body.max()) if len(let.n_body) else 1
+
+    @property
+    def n_cells(self):
+        return len(self.radius)
+
+    @property
+    def is_leaf(self):
+        return self.n_child == 0
+
+    @property
+    def leaves(self):
+        return np.nonzero(self.is_leaf)[0]
+
+
+def graft(let: LETData) -> _GraftedTree:
+    """Graft a received subtree root (no global tree is ever built)."""
+    return _GraftedTree(let)

@@ -1,0 +1,2 @@
+# Subpackages are imported directly (repro.core.partition.sfc etc.) — keep
+# this __init__ empty to avoid import cycles with tree.py.

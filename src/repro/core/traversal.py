@@ -1,0 +1,69 @@
+"""Dual-tree traversal with the flexible multipole acceptance criterion.
+
+MAC (exaFMM convention): a cell pair (A, B) is *well separated* iff
+    R_A + R_B < theta * |c_A - c_B|
+with *tight* radii/centers (squeezed bounding boxes).  The flexible MAC is
+what lets the hybrid-ORB scheme tolerate misaligned local trees (paper §2.2).
+
+Host-side NumPy; outputs are flat pair lists consumed by the JAX evaluator.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["dual_traversal", "mac_ok"]
+
+
+def mac_ok(ca, ra, cb, rb, theta: float) -> bool:
+    d = float(np.linalg.norm(ca - cb))
+    return (ra + rb) < theta * d
+
+
+def dual_traversal(tgt_tree, src_tree, theta: float = 0.5, with_m2p: bool = False):
+    """Returns (m2l_pairs, p2p_pairs[, m2p_pairs]) as (*,2) int arrays of
+    (target_cell, source_cell).
+
+    If the source tree is a grafted LET, some source cells are *truncated*:
+    multipole-sufficient leaves with no children and no bodies (see let.py).
+    A truncated cell that fails the MAC against a local *leaf* falls back to
+    M2P (direct multipole evaluation at the leaf's bodies), which is accurate
+    because the sender's acceptance criterion 2 R_c < theta * dist(c, box)
+    bounds R_c / |y - c| < theta/2 for every body y in the remote box.
+    """
+    m2l, p2p, m2p = [], [], []
+    tc, tr = tgt_tree.center, tgt_tree.radius
+    sc, sr = src_tree.center, src_tree.radius
+    t_leaf, s_leaf = tgt_tree.is_leaf, src_tree.is_leaf
+    truncated = getattr(src_tree, "truncated", None)
+    if truncated is None:
+        truncated = np.zeros(len(sc), dtype=bool)
+    stack = [(0, 0)]
+    while stack:
+        a, b = stack.pop()
+        d = np.linalg.norm(tc[a] - sc[b])
+        if (tr[a] + sr[b]) < theta * d:
+            m2l.append((a, b))
+            continue
+        if t_leaf[a] and s_leaf[b]:
+            if truncated[b]:
+                m2p.append((a, b))
+            else:
+                p2p.append((a, b))
+            continue
+        # split the larger cell (or the only splittable one)
+        split_target = (not t_leaf[a]) and (s_leaf[b] or tr[a] >= sr[b])
+        if split_target:
+            cs, nc = tgt_tree.child_start[a], tgt_tree.n_child[a]
+            for c in range(cs, cs + nc):
+                stack.append((c, b))
+        else:
+            cs, nc = src_tree.child_start[b], src_tree.n_child[b]
+            for c in range(cs, cs + nc):
+                stack.append((a, c))
+    m2l = np.asarray(m2l, dtype=np.int64).reshape(-1, 2)
+    p2p = np.asarray(p2p, dtype=np.int64).reshape(-1, 2)
+    m2p = np.asarray(m2p, dtype=np.int64).reshape(-1, 2)
+    if with_m2p:
+        return m2l, p2p, m2p
+    assert len(m2p) == 0, "truncated source cells require with_m2p=True"
+    return m2l, p2p

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+  p2p.py        — FMM particle-particle Laplace sum (the paper's compute floor)
+  attention.py  — blocked causal flash attention with GQA + sliding window
+  rwkv.py       — RWKV6 chunkwise WKV recurrence (state resident in VMEM)
+
+Each kernel is `pl.pallas_call` + explicit BlockSpec VMEM tiling; `ops.py`
+exposes jit'd wrappers (interpret mode on CPU, compiled on TPU) and `ref.py`
+holds the pure-jnp oracles that gate correctness in tests.
+"""

@@ -1,0 +1,52 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs as traced Python, validating BlockSpec indexing and numerics; on a
+real TPU backend set `interpret=False` (automatic via default_backend).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import attention as _attn
+from repro.kernels import p2p as _p2p
+from repro.kernels import rwkv as _rwkv
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def p2p_blocked(q, x_src, x_tgt):
+    """Batched pairwise Laplace sum via the Pallas kernel."""
+    return _p2p.p2p_pallas(q, x_src, x_tgt, interpret=INTERPRET)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None):
+    return _attn.flash_attention(q, k, v, causal=causal, window=window,
+                                 interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def rwkv6_wkv(r, k, v, w, u, state, *, chunk: int = 64):
+    """Full-sequence RWKV6 WKV: lax.scan over VMEM-resident chunk kernels.
+
+    r/k/v/w: (BH, S, D); u: (BH, D); state: (BH, Dk, Dv).
+    Returns (y (BH, S, Dv), final_state).
+    """
+    BH, S, D = r.shape
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+
+    def body(state, xs):
+        rc, kc, vc, wc = xs
+        y, state = _rwkv.wkv_chunk(rc, kc, vc, wc, u, state,
+                                   interpret=INTERPRET)
+        return state, y
+
+    def split(a):
+        return jnp.moveaxis(a.reshape(BH, n, chunk, -1), 1, 0)
+
+    state, ys = jax.lax.scan(body, state, (split(r), split(k), split(v), split(w)))
+    return jnp.moveaxis(ys, 0, 1).reshape(BH, S, -1), state

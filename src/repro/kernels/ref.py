@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def p2p_ref(q, x_src, x_tgt):
+    """q: (P, S); x_src: (P, S, 3); x_tgt: (P, T, 3) -> (P, T)."""
+    d = x_tgt[:, :, None, :] - x_src[:, None, :, :]
+    r2 = jnp.sum(d * d, axis=-1)
+    inv = jnp.where(r2 > 0, jax.lax.rsqrt(jnp.maximum(r2, 1e-30)), 0.0)
+    return jnp.einsum("pts,ps->pt", inv, q)
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None):
+    """q: (B, H, S, D); k/v: (B, Hkv, S, D) -> (B, H, S, D)."""
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    group = H // Hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) / (D ** 0.5)
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+
+
+def wkv_ref(r, k, v, w, u, state):
+    """RWKV6 token-by-token oracle.  r/k/v/w: (BH, C, D); u: (BH, D);
+    state: (BH, Dk, Dv) -> (y, new_state)."""
+    def head(r, k, v, w, u, s0):
+        def step(s, inp):
+            r_t, k_t, v_t, w_t = inp
+            kv = jnp.outer(k_t, v_t)
+            y = jnp.sum(r_t[:, None] * (s + u[:, None] * kv), axis=0)
+            return w_t[:, None] * s + kv, y
+        s1, ys = jax.lax.scan(step, s0.astype(jnp.float32),
+                              (r.astype(jnp.float32), k.astype(jnp.float32),
+                               v.astype(jnp.float32), w.astype(jnp.float32)))
+        return ys, s1
+    ys, s1 = jax.vmap(head)(r, k, v, w, u, state)
+    return ys.astype(r.dtype), s1.astype(state.dtype)

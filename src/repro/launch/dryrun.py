@@ -1,0 +1,245 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production mesh; record memory_analysis, cost_analysis and collective
+bytes for the roofline.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m \
+      --shape train_4k [--multi-pod] [--out artifacts/]
+
+Artifacts are JSON per cell so the run is resumable and EXPERIMENTS.md is
+generated from disk.
+"""
+import argparse
+import json
+import math
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis.hlo import collective_bytes
+from repro.configs import SHAPES, cell_enabled, get_config, input_specs, list_archs
+from repro.configs.base import active_param_count, param_count
+from repro.launch.mesh import make_production_mesh, parallelism_for
+from repro.models import build_model
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import make_train_step
+
+
+def _micro_batches(cfg, shape, dp_size: int, budget_bytes: float = 2.5e9) -> int:
+    """Grad-accumulation microbatches so per-device remat checkpoints fit."""
+    layers = cfg.n_layers + cfg.n_enc_layers
+    per_layer = shape.global_batch / dp_size * shape.seq_len * cfg.d_model * 2
+    n = max(1, math.ceil(per_layer * layers / budget_bytes))
+    n = 1 << (n - 1).bit_length()                  # next pow2
+    return min(n, shape.global_batch // dp_size * 0 + max(1, shape.global_batch // dp_size))
+
+
+def batch_shardings(cfg, shape, mesh, par):
+    dp = par.data_axes
+    specs = {}
+    for name, struct in input_specs(cfg, shape).items():
+        if name == "pos":
+            specs[name] = NamedSharding(mesh, P())
+        elif struct.ndim == 2:
+            specs[name] = NamedSharding(mesh, P(dp, None))
+        else:
+            specs[name] = NamedSharding(mesh, P(dp, None, None))
+        # long_500k: batch 1 cannot shard over data -> replicate
+        if shape.global_batch % par.dp_size() != 0:
+            specs[name] = NamedSharding(mesh, P())
+    return specs
+
+
+def cache_shardings(cfg, mesh, par, cache_struct, batch_shardable: bool):
+    """Key-path-aware cache shardings: batch over data, cache *sequence* over
+    model (sequence-parallel decode attention — softmax stats all-reduce is
+    tiny); recurrent states shard their channel dims over model."""
+    dp = par.data_axes if batch_shardable else None
+    tp = par.model_axis
+
+    def spec_for(path, struct):
+        key = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        nd = len(struct.shape)
+        if key in ("k", "v", "k_loc", "v_loc"):       # (n_sb, [n_sub,] B, S, n, hd)
+            if nd == 6:
+                return NamedSharding(mesh, P(None, None, dp, tp, None, None))
+            return NamedSharding(mesh, P(None, dp, tp, None, None))  # hymba
+        if key in ("k_glob", "v_glob"):               # (n_sb, B, S, n, hd)
+            return NamedSharding(mesh, P(None, dp, tp, None, None))
+        if key == "wkv":                              # (n_sb, B, H, hd, hd)
+            return NamedSharding(mesh, P(None, dp, tp, None, None))
+        if key in ("tm_tok", "cm_tok", "conv"):       # (n_sb, B, 1|4, D)
+            return NamedSharding(mesh, P(None, dp, None, None))
+        if key == "ssm_h":                            # (n_sb, B, D, N)
+            return NamedSharding(mesh, P(None, dp, tp, None))
+        if key == "memory":                           # (B, S, D)
+            return NamedSharding(mesh, P(dp, None, None))
+        return NamedSharding(mesh, P())
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_struct)
+    return jax.tree_util.tree_unflatten(treedef,
+                                        [spec_for(p, s) for p, s in flat])
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               hierarchical: bool = True, donate: bool = True,
+               moe_seq_shard: bool = False, fsdp_pod: bool = False):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_enabled(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}, None
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    par = parallelism_for(mesh, hierarchical=hierarchical,
+                          moe_seq_shard=moe_seq_shard)
+    model = build_model(cfg)
+    pstructs = model.param_structs()
+    pshard = model.param_shardings(mesh, fsdp_pod=fsdp_pod)
+    bshard = batch_shardings(cfg, shape, mesh, par)
+    bstructs = input_specs(cfg, shape)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        n_micro = _micro_batches(cfg, shape, par.dp_size())
+        step = make_train_step(model, par, AdamWConfig(), n_micro=n_micro,
+                               chunked_attn=shape.seq_len >= 4096
+                               and cfg.family not in ("ssm", "hybrid"))
+        from repro.train.optimizer import OptState
+        ostructs = OptState(
+            master=jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), pstructs),
+            m=jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), pstructs),
+            v=jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), pstructs),
+            step=jax.ShapeDtypeStruct((), jnp.int32))
+        oshard = OptState(master=pshard, m=pshard, v=pshard,
+                          step=NamedSharding(mesh, P()))
+        fn = jax.jit(step, in_shardings=(pshard, oshard, bshard),
+                     donate_argnums=(0, 1) if donate else ())
+        lowered = fn.lower(pstructs, ostructs, bstructs)
+        extra = {"n_micro": n_micro}
+    elif shape.kind == "prefill":
+        S_max = shape.seq_len + 128
+        fn = jax.jit(lambda p, b: model.prefill(p, b, par, S_max),
+                     in_shardings=(pshard, bshard))
+        lowered = fn.lower(pstructs, bstructs)
+        extra = {}
+    else:  # decode
+        S_max = shape.seq_len
+        B = shape.global_batch
+        cstruct = model.cache_struct(B, S_max)
+        shardable = B % par.dp_size() == 0
+        cshard = cache_shardings(cfg, mesh, par, cstruct, shardable)
+        tok_struct = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        tok_shard = NamedSharding(mesh, P(par.data_axes if shardable else None, None))
+        pos_struct = jax.ShapeDtypeStruct((), jnp.int32)
+        fn = jax.jit(lambda p, c, t, pos: model.decode_step(p, c, t, pos, par),
+                     in_shardings=(pshard, cshard, tok_shard, NamedSharding(mesh, P())),
+                     donate_argnums=(1,) if donate else ())
+        lowered = fn.lower(pstructs, cstruct, tok_struct, pos_struct)
+        extra = {}
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    from repro.analysis.hlo_walk import weighted_analysis
+    try:
+        walked = weighted_analysis(txt)
+    except Exception as e:  # keep the artifact even if the walker trips
+        walked = {"error": f"{type(e).__name__}: {e}"}
+    result = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "hierarchical": hierarchical,
+        "mesh": list(mesh.devices.shape), "axes": list(mesh.axis_names),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops": cost.get("flops", 0.0) if cost else None,
+        "bytes_accessed": cost.get("bytes accessed", 0.0) if cost else None,
+        "memory": {
+            k: getattr(mem, k)
+            for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+                      "output_size_in_bytes", "generated_code_size_in_bytes")
+            if mem is not None and hasattr(mem, k)
+        },
+        "collectives": coll,
+        "walked": walked,
+        "params": param_count(cfg),
+        "active_params": active_param_count(cfg),
+        **extra,
+    }
+    return result, txt
+
+
+def save_artifact(path: str, res: dict, hlo_txt: str | None = None):
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    if hlo_txt is not None:
+        import gzip
+        with gzip.open(path.replace(".json", ".hlo.gz"), "wt") as f:
+            f.write(hlo_txt)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--flat", action="store_true",
+                    help="disable hierarchical (HSDX-style) collectives")
+    ap.add_argument("--opt-moe", action="store_true",
+                    help="sequence-sharded MoE dispatch (perf hillclimb)")
+    ap.add_argument("--fsdp-pod", action="store_true",
+                    help="flat ZeRO-3 across pods (vs pod-replicated params "
+                         "+ cross-pod grad all-reduce, the default)")
+    ap.add_argument("--out", default="artifacts")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            tag = f"{arch}__{shape}__{'2pod' if args.multi_pod else '1pod'}"
+            if not (args.flat or True):
+                pass
+            if args.flat:
+                tag += "__flat"
+            if args.opt_moe:
+                tag += "__optmoe"
+            if args.fsdp_pod:
+                tag += "__fsdppod"
+            path = os.path.join(args.out, tag + ".json")
+            if args.skip_existing and os.path.exists(path):
+                print(f"[skip] {tag}")
+                continue
+            print(f"[dryrun] {tag} ...", flush=True)
+            hlo_txt = None
+            try:
+                res, hlo_txt = lower_cell(arch, shape, args.multi_pod,
+                                          hierarchical=not args.flat,
+                                          moe_seq_shard=args.opt_moe,
+                                          fsdp_pod=args.fsdp_pod)
+            except Exception as e:  # record failures as artifacts too
+                res = {"arch": arch, "shape": shape, "multi_pod": args.multi_pod,
+                       "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-3000:]}
+            save_artifact(path, res, hlo_txt)
+            status = ("SKIP " + res["skipped"]) if "skipped" in res else \
+                ("ERROR " + res["error"][:120]) if "error" in res else \
+                (f"ok lower={res['lower_s']}s compile={res['compile_s']}s "
+                 f"coll={res['collectives']['total_bytes']/1e9:.2f}GB/dev")
+            print(f"[dryrun] {tag}: {status}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh: TPU v5e pods, 256 chips each.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "parallelism_for"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def parallelism_for(mesh, *, hierarchical: bool = True, q_chunk: int = 256,
+                    kv_chunk: int = 1024, use_pallas: bool = False,
+                    moe_seq_shard: bool = False):
+    from repro.sharding.parallel import Parallelism
+    multi = "pod" in mesh.axis_names
+    return Parallelism(
+        mesh=mesh,
+        data_axes=("pod", "data") if multi else ("data",),
+        model_axis="model",
+        pod_axis="pod" if multi else None,
+        hierarchical=hierarchical,
+        moe_seq_shard=moe_seq_shard,
+        q_chunk=q_chunk, kv_chunk=kv_chunk, use_pallas=use_pallas,
+    )

@@ -1,0 +1,115 @@
+"""Fault-tolerant training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --smoke \
+        --steps 50 --ckpt-dir /tmp/ckpt [--simulate-failure-at 20]
+
+Production posture at 1000+ nodes:
+  - checkpoint/restart: atomic sharded saves every --ckpt-every steps; on
+    start the driver resumes from the latest step (params, opt state, data
+    cursor) — a SIGTERM'd pod restarts exactly where it left off;
+  - elastic scaling: checkpoints record full (unsharded) leaf shapes, so a
+    restart may load onto a different mesh (tests/test_ckpt.py exercises a
+    reshard);
+  - straggler mitigation: a per-step deadline — steps that exceed it are
+    logged and counted (on real fleets this feeds the health controller that
+    evicts slow hosts; the deterministic synthetic pipeline removes input
+    stalls entirely);
+  - failure injection: --simulate-failure-at N raises mid-run so the restart
+    path stays tested.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import latest_step, load_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.data import SyntheticLM
+from repro.models import build_model
+from repro.sharding.parallel import Parallelism
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.train_step import make_train_step
+
+
+def run(arch: str, smoke: bool, steps: int, batch: int, seq: int,
+        ckpt_dir: str, ckpt_every: int = 20, lr: float = 3e-4,
+        simulate_failure_at: int | None = None, n_micro: int = 1,
+        step_deadline_s: float = 120.0, log_every: int = 5,
+        seed: int = 0) -> dict:
+    cfg = get_config(arch, smoke=smoke)
+    model = build_model(cfg)
+    par = Parallelism(remat=False)
+    opt_cfg = AdamWConfig(lr=lr, total_steps=max(steps, 10), warmup=min(20, steps // 5 + 1))
+    train_step = jax.jit(make_train_step(model, par, opt_cfg, n_micro=n_micro))
+
+    data = SyntheticLM(cfg.vocab, seq, batch, seed=seed)
+    start = 0
+    last = latest_step(ckpt_dir) if ckpt_dir else None
+    if last is not None:
+        like = {"params": model.init(jax.random.key(seed)),
+                "opt": init_opt_state(model.init(jax.random.key(seed)))}
+        state, extra = load_checkpoint(ckpt_dir, last, like)
+        params, opt_state = state["params"], state["opt"]
+        data.restore(extra["data"])
+        start = last
+        print(f"[train] resumed from step {start}")
+    else:
+        params = model.init(jax.random.key(seed))
+        opt_state = init_opt_state(params)
+
+    losses, stragglers = [], 0
+    for step in range(start, steps):
+        if simulate_failure_at is not None and step == simulate_failure_at:
+            raise RuntimeError(f"simulated node failure at step {step}")
+        t0 = time.time()
+        b = data.next_batch()
+        b = {k: jnp.asarray(v) for k, v in b.items()}
+        params, opt_state, metrics = train_step(params, opt_state, b)
+        loss = float(metrics["loss"])
+        dt = time.time() - t0
+        if dt > step_deadline_s:
+            stragglers += 1
+            print(f"[train] step {step}: STRAGGLER {dt:.1f}s > {step_deadline_s}s")
+        losses.append(loss)
+        if step % log_every == 0:
+            print(f"[train] step {step} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} {dt:.2f}s", flush=True)
+        if ckpt_dir and (step + 1) % ckpt_every == 0:
+            save_checkpoint(ckpt_dir, step + 1,
+                            {"params": params, "opt": opt_state},
+                            extra={"data": data.snapshot()})
+    if ckpt_dir:
+        save_checkpoint(ckpt_dir, steps, {"params": params, "opt": opt_state},
+                        extra={"data": data.snapshot()})
+    return {"losses": losses, "stragglers": stragglers,
+            "final_loss": losses[-1] if losses else None}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--simulate-failure-at", type=int, default=None)
+    args = ap.parse_args()
+    out = run(args.arch, args.smoke, args.steps, args.batch, args.seq,
+              args.ckpt_dir, args.ckpt_every, args.lr,
+              args.simulate_failure_at, args.n_micro)
+    print(json.dumps({"final_loss": out["final_loss"],
+                      "stragglers": out["stragglers"]}))
+
+
+if __name__ == "__main__":
+    main()

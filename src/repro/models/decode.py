@@ -1,0 +1,394 @@
+"""Serving path: prefill + single-token decode with KV caches.
+
+Cache layout is family-uniform so one lax.scan drives every layer stack:
+  dense/moe : {'k','v'}  (B, S_max, Hkv, hd) per layer
+  gemma3    : 5 RING buffers of length `window` + 1 full cache per superblock
+  vlm       : 4 self caches per superblock; cross-attn memory stored ONCE
+  encdec    : decoder self caches; encoder memory stored once
+  hymba     : full attn cache + SSM state (h, conv tail) per layer
+  rwkv6     : (token-shift tails, WKV state) per layer — O(1) in sequence!
+
+Sliding-window ring buffers are what make long_500k decodable for gemma3 /
+hymba: cache bytes scale with `window`, not with the 512k position.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import apply_rope, attention_full, rms_norm, swiglu
+from repro.models.transformer import (_mlp_sublayer, _moe_sublayer, _period,
+                                      _n_superblocks, _sublayer_kind,
+                                      logits_fn, forward)
+
+CDT = jnp.bfloat16
+
+
+# ------------------------------------------------------------ cache defs ---
+def cache_struct(cfg, B: int, S_max: int):
+    """ShapeDtypeStruct pytree of the decode cache (allocation-free)."""
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        init_cache(cfg, B, S_max, struct_only=True))
+
+
+def init_cache(cfg, B: int, S_max: int, struct_only: bool = False):
+    hd, Hkv, D = cfg.hd, cfg.n_kv_heads, cfg.d_model
+    n_sb = _n_superblocks(cfg)
+    w = cfg.sliding_window
+
+    def z(shape, dtype=CDT):
+        if struct_only:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
+
+    if cfg.family == "ssm":
+        H = cfg.n_heads
+        per = {"tm_tok": z((B, 1, D)), "wkv": z((B, H, hd, hd), jnp.float32),
+               "cm_tok": z((B, 1, D))}
+        return {"blocks": jax.tree.map(
+            lambda s: (jax.ShapeDtypeStruct((n_sb,) + s.shape, s.dtype)
+                       if struct_only else jnp.zeros((n_sb,) + s.shape, s.dtype)),
+            per, is_leaf=lambda t: isinstance(t, (jax.ShapeDtypeStruct, jnp.ndarray)))}
+
+    if cfg.family == "hybrid":
+        per = {"k": z((B, S_max, Hkv, hd)), "v": z((B, S_max, Hkv, hd)),
+               "ssm_h": z((B, D, cfg.ssm_state), jnp.float32),
+               "conv": z((B, 4, D))}
+    elif cfg.swa_period:
+        nl = cfg.swa_period - 1
+        per = {"k_loc": z((nl, B, w, Hkv, hd)), "v_loc": z((nl, B, w, Hkv, hd)),
+               "k_glob": z((B, S_max, Hkv, hd)), "v_glob": z((B, S_max, Hkv, hd))}
+    else:
+        # unified layout: self-attn caches stacked over sublayers (n_self >= 1)
+        n_self = _period(cfg) - (1 if cfg.cross_attn_period else 0)
+        per = {"k": z((n_self, B, S_max, Hkv, hd)),
+               "v": z((n_self, B, S_max, Hkv, hd))}
+
+    def stack(s):
+        if struct_only:
+            return jax.ShapeDtypeStruct((n_sb,) + s.shape, s.dtype)
+        return jnp.zeros((n_sb,) + s.shape, s.dtype)
+
+    cache = {"blocks": jax.tree.map(
+        stack, per, is_leaf=lambda t: isinstance(t, (jax.ShapeDtypeStruct, jnp.ndarray)))}
+    if cfg.family == "vlm":
+        cache["memory"] = z((B, cfg.n_vis_tokens, D))
+    if cfg.is_encdec:
+        cache["memory"] = z((B, S_max, D))
+        cache["memory_len"] = z((), jnp.int32)
+    return cache
+
+
+# ------------------------------------------------------- kv projections ----
+def _kv(x, p, cfg, positions):
+    B, S, _ = x.shape
+    k = (x @ p["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    v = (x @ p["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    if cfg.qk_norm:
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def _q(x, p, cfg, positions):
+    B, S, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, cfg.hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    return apply_rope(q, positions, cfg.rope_theta)
+
+
+def _ring_fill(k_full, window):
+    """Last `window` positions of k (B,S,n,hd) laid out ring-style."""
+    B, S, n, hd = k_full.shape
+    ring = jnp.zeros((B, window, n, hd), k_full.dtype)
+    take = min(window, S)
+    tail = k_full[:, S - take:]                       # (B,take,n,hd)
+    pos = (jnp.arange(S - take, S)) % window
+    return ring.at[:, pos].set(tail)
+
+
+def _decode_attn(q, k_cache, v_cache, p, cfg, kv_len):
+    """q: (B,1,H,hd) vs cache (B,L,n,hd) with kv_len valid entries."""
+    o = attention_full(q, k_cache, v_cache, causal=False, kv_len=kv_len)
+    B = q.shape[0]
+    return o.reshape(B, 1, cfg.n_heads * cfg.hd) @ p["wo"]
+
+
+# ---------------------------------------------------------------- prefill --
+def prefill(params, batch, cfg, par, S_max: int):
+    """Run the full prompt; return (cache, last-token logits)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    chunked = S > 4096
+    h, _ = forward(params, tokens, cfg, par, frames=batch.get("frames"),
+                   vis=batch.get("vis"), chunked=chunked)
+    # recompute per-layer caches from a second scan over blocks: cheap relative
+    # to forward (projections only), and keeps forward() single-purpose.
+    cache = init_cache(cfg, B, S_max)
+    emb = params["embed"]
+    x = par.constrain(emb[tokens].astype(jnp.dtype(cfg.dtype)), par.dp, None, None)
+    positions = jnp.arange(S)
+
+    if cfg.family == "vlm":
+        cache["memory"] = batch["vis"].astype(CDT)
+    if cfg.is_encdec:
+        m = batch["frames"].astype(jnp.dtype(cfg.dtype))
+        from repro.models.transformer import _attn_sublayer
+        def enc_block(mh, pb):
+            mh = _attn_sublayer(mh, pb["attn0"], cfg, par, positions=positions,
+                                causal=False)
+            mh = _mlp_sublayer(mh, pb["mlp0"], cfg, par)
+            return mh, None
+        m, _ = jax.lax.scan(enc_block, m, params["enc_blocks"])
+        mem = rms_norm(m, params["enc_ln"], cfg.norm_eps)
+        pad = S_max - S
+        cache["memory"] = jnp.pad(mem, ((0, 0), (0, pad), (0, 0))).astype(CDT)
+        cache["memory_len"] = jnp.asarray(S, jnp.int32)
+
+    # one more pass through the blocks to collect (k, v) per layer — the
+    # hidden state advances through the REAL sublayers so deep caches match
+    from repro.models.transformer import _attn_sublayer
+    enc_memory = cache.get("memory")
+    if cfg.is_encdec:
+        enc_memory_live = cache["memory"][:, :S]          # unpadded view
+    else:
+        enc_memory_live = enc_memory
+
+    def collect(carry, pb):
+        hh = carry
+        entries = {}
+        period = _period(cfg)
+        for s in range(period):
+            kind = _sublayer_kind(cfg, s)
+            if kind == "cross":
+                hh = _attn_sublayer(hh, pb[f"cross{s}"], cfg, par,
+                                    positions=positions,
+                                    memory=enc_memory_live.astype(hh.dtype))
+            else:
+                pa = pb[f"attn{s}"]
+                xn = rms_norm(hh, pa["ln"], cfg.norm_eps)
+                k, v = _kv(xn, pa, cfg, positions)
+                if kind == "attn_local":
+                    entries.setdefault("k_loc", []).append(
+                        _ring_fill(k, cfg.sliding_window))
+                    entries.setdefault("v_loc", []).append(
+                        _ring_fill(v, cfg.sliding_window))
+                    hh = _attn_sublayer(hh, pa, cfg, par, positions=positions,
+                                        causal=True, window=cfg.sliding_window,
+                                        chunked=chunked)
+                else:
+                    pad = ((0, 0), (0, S_max - S), (0, 0), (0, 0))
+                    if cfg.swa_period:
+                        entries["k_glob"] = jnp.pad(k, pad)
+                        entries["v_glob"] = jnp.pad(v, pad)
+                    else:
+                        entries.setdefault("k", []).append(jnp.pad(k, pad))
+                        entries.setdefault("v", []).append(jnp.pad(v, pad))
+                    hh = _attn_sublayer(hh, pa, cfg, par, positions=positions,
+                                        causal=True, chunked=chunked)
+            if cfg.is_encdec:
+                hh = _attn_sublayer(hh, pb[f"dec_cross{s}"], cfg, par,
+                                    positions=positions,
+                                    memory=enc_memory_live.astype(hh.dtype))
+            if cfg.n_experts:
+                hh, _ = _moe_sublayer(hh, pb[f"moe{s}"], cfg, par)
+            else:
+                hh = _mlp_sublayer(hh, pb[f"mlp{s}"], cfg, par)
+        out = {}
+        for key, val in entries.items():
+            out[key] = jnp.stack(val, 0) if isinstance(val, list) else val
+        return hh, out
+
+    if cfg.family in ("ssm", "hybrid"):
+        cache = _prefill_recurrent(params, x, cfg, par, cache, positions, S_max)
+    else:
+        _, per_layer = jax.lax.scan(collect, x, params["blocks"])
+        cache["blocks"] = jax.tree.map(lambda a: a.astype(CDT)
+                                       if a.dtype != jnp.float32 else a, per_layer)
+    logits = logits_fn(params, h[:, -1:], cfg, par)
+    return cache, logits
+
+
+def _prefill_recurrent(params, x, cfg, par, cache, positions, S_max):
+    S = x.shape[1]
+    if cfg.family == "ssm":
+        def block(carry, pb):
+            hh, _ = rwkv_mod.rwkv_block(carry, pb["rwkv"], cfg)
+            # emit shift/wkv states
+            p = pb["rwkv"]
+            xn = rms_norm(carry, p["ln1"], cfg.norm_eps)
+            _, (tm_tok, wkv) = rwkv_mod.time_mix(xn, p, cfg)
+            x2 = carry + (hh - carry) * 0  # placeholder; recompute below
+            return hh, {"tm_tok": tm_tok.astype(CDT), "wkv": wkv,
+                        "cm_tok": rms_norm(hh, p["ln2"], cfg.norm_eps)[:, -1:].astype(CDT)}
+        _, per_layer = jax.lax.scan(block, x, params["blocks"])
+        cache["blocks"] = per_layer
+        return cache
+    # hybrid: collect attn kv + ssm state
+    def block(carry, xs):
+        pb, glob = xs
+        pa, ps = pb["attn0"], pb["ssm0"]
+        xn = rms_norm(carry, pa["ln"], cfg.norm_eps)
+        k, v = _kv(xn, pa, cfg, positions)
+        ent = {"k": jnp.pad(k, ((0, 0), (0, S_max - S), (0, 0), (0, 0))).astype(CDT),
+               "v": jnp.pad(v, ((0, 0), (0, S_max - S), (0, 0), (0, 0))).astype(CDT)}
+        from repro.models.transformer import _hybrid_sublayer
+        win = jnp.where(glob > 0, S + 1, cfg.sliding_window)
+        hh = _hybrid_sublayer(carry, pa, ps, cfg, par, positions=positions,
+                              window=win, chunked=False)
+        # ssm terminal state
+        xi = rms_norm(carry, pa["ln"], cfg.norm_eps)
+        _, h_last = ssm_mod.ssm_head(xi, ps, cfg)
+        ent["ssm_h"] = h_last
+        ent["conv"] = jnp.pad((xi @ ps["in_proj"])[:, -4:],
+                              ((0, 0), (max(0, 4 - S), 0), (0, 0))).astype(CDT)
+        hh = _mlp_sublayer(hh, pb["mlp0"], cfg, par)
+        return hh, ent
+    n_sb = _n_superblocks(cfg)
+    is_global = jnp.asarray([1 if i in cfg.global_layers else 0
+                             for i in range(n_sb)], jnp.int32)
+    _, per_layer = jax.lax.scan(block, x, (params["blocks"], is_global))
+    cache["blocks"] = per_layer
+    return cache
+
+
+# ----------------------------------------------------------------- decode --
+def decode_step(params, cache, tokens, pos, cfg, par):
+    """One token for every sequence.  tokens: (B, 1); pos: scalar position.
+    Returns (logits (B, 1, V-sharded), new cache)."""
+    B = tokens.shape[0]
+    emb = params["embed"]
+    h = par.constrain(emb[tokens].astype(jnp.dtype(cfg.dtype)), par.dp, None, None)
+    positions = jnp.full((1,), pos, jnp.int32)
+    memory = cache.get("memory")
+    n_sb = _n_superblocks(cfg)
+
+    if cfg.family == "ssm":
+        def block(carry, xs):
+            pb, c = xs
+            hh, new_c = rwkv_mod.rwkv_block(
+                carry, pb["rwkv"], cfg,
+                cache={"tm_tok": c["tm_tok"].astype(carry.dtype),
+                       "wkv": c["wkv"], "cm_tok": c["cm_tok"].astype(carry.dtype)})
+            new_c = {"tm_tok": new_c["tm_tok"].astype(CDT), "wkv": new_c["wkv"],
+                     "cm_tok": new_c["cm_tok"].astype(CDT)}
+            return hh, new_c
+        h, new_blocks = jax.lax.scan(block, h, (params["blocks"], cache["blocks"]))
+        new_cache = dict(cache, blocks=new_blocks)
+    elif cfg.family == "hybrid":
+        is_global = jnp.asarray([1 if i in cfg.global_layers else 0
+                                 for i in range(n_sb)], jnp.int32)
+        w = cfg.sliding_window
+
+        def block(carry, xs):
+            pb, c, glob = xs
+            pa, ps = pb["attn0"], pb["ssm0"]
+            xn = rms_norm(carry, pa["ln"], cfg.norm_eps)
+            q = _q(xn, pa, cfg, positions)
+            k, v = _kv(xn, pa, cfg, positions)
+            kc = jax.lax.dynamic_update_slice_in_dim(c["k"], k.astype(CDT), pos, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(c["v"], v.astype(CDT), pos, axis=1)
+            win = jnp.where(glob > 0, pos + 2, w)
+            o = attention_full(q, kc.astype(q.dtype), vc.astype(q.dtype),
+                               causal=False, window=win, q_offset=pos,
+                               kv_len=pos + 1, par=par)
+            o_attn = o.reshape(B, 1, -1) @ pa["wo"]
+            # ssm single step
+            xi = xn @ ps["in_proj"]
+            conv = jnp.concatenate([c["conv"][:, 1:], xi.astype(CDT)], axis=1)
+            xi = jax.nn.silu((conv.astype(xi.dtype) * ps["conv_w"][None]).sum(1, keepdims=True) + xi)
+            dt = jax.nn.softplus(xi @ ps["dt_proj"])
+            Bm = xi @ ps["B_proj"]
+            Cm = xi @ ps["C_proj"]
+            A = -jnp.exp(ps["A_log"].astype(jnp.float32))
+            a = jnp.exp(dt[..., None] * A[None, None])[:, 0]
+            bterm = ((dt[..., None] * Bm[:, :, None, :]) * xi[..., None])[:, 0]
+            h_new = a * c["ssm_h"] + bterm.astype(jnp.float32)
+            y_ssm = jnp.einsum("bdn,bn->bd", h_new.astype(xi.dtype), Cm[:, 0])
+            y_ssm = (y_ssm + xi[:, 0] * ps["D_skip"])[:, None] @ ps["out_proj"]
+            hh = carry + 0.5 * (o_attn + y_ssm)
+            hh = _mlp_sublayer(hh, pb["mlp0"], cfg, par)
+            return hh, {"k": kc, "v": vc, "ssm_h": h_new, "conv": conv}
+        h, new_blocks = jax.lax.scan(block, h,
+                                     (params["blocks"], cache["blocks"], is_global))
+        new_cache = dict(cache, blocks=new_blocks)
+    else:
+        w = cfg.sliding_window
+
+        from repro.models.transformer import _attn_sublayer
+        mem_len = cache.get("memory_len")
+
+        def block(carry, xs):
+            pb, c = xs
+            hh = carry
+            new_c = dict(c)
+            si = 0   # self-attn sublayer counter (stacked cache index)
+            li = 0   # local (ring) sublayer counter
+            for s in range(_period(cfg)):
+                kind = _sublayer_kind(cfg, s)
+                if kind == "cross":
+                    hh = _attn_sublayer(hh, pb[f"cross{s}"], cfg, par,
+                                        positions=positions,
+                                        memory=memory.astype(hh.dtype))
+                else:
+                    pa = pb[f"attn{s}"]
+                    xn = rms_norm(hh, pa["ln"], cfg.norm_eps)
+                    q = _q(xn, pa, cfg, positions)
+                    k, v = _kv(xn, pa, cfg, positions)
+                    if kind == "attn_local":
+                        slot = jax.lax.rem(pos, w)
+                        kc = jax.lax.dynamic_update_slice(
+                            c["k_loc"], k[None].astype(CDT), (li, 0, slot, 0, 0))
+                        vc = jax.lax.dynamic_update_slice(
+                            c["v_loc"], v[None].astype(CDT), (li, 0, slot, 0, 0))
+                        new_c["k_loc"], new_c["v_loc"] = kc, vc
+                        kv_len = jnp.minimum(pos + 1, w)
+                        o = attention_full(q, kc[li].astype(q.dtype),
+                                           vc[li].astype(q.dtype),
+                                           causal=False, kv_len=kv_len, par=par)
+                        hh = hh + o.reshape(B, 1, -1) @ pa["wo"]
+                        li += 1
+                    elif cfg.swa_period:        # the one global layer
+                        kc = jax.lax.dynamic_update_slice_in_dim(
+                            c["k_glob"], k.astype(CDT), pos, axis=1)
+                        vc = jax.lax.dynamic_update_slice_in_dim(
+                            c["v_glob"], v.astype(CDT), pos, axis=1)
+                        new_c["k_glob"], new_c["v_glob"] = kc, vc
+                        o = attention_full(q, kc.astype(q.dtype),
+                                           vc.astype(q.dtype),
+                                           causal=False, kv_len=pos + 1, par=par)
+                        hh = hh + o.reshape(B, 1, -1) @ pa["wo"]
+                    else:                       # unified stacked self cache
+                        kc = jax.lax.dynamic_update_slice(
+                            c["k"], k[None].astype(CDT), (si, 0, pos, 0, 0))
+                        vc = jax.lax.dynamic_update_slice(
+                            c["v"], v[None].astype(CDT), (si, 0, pos, 0, 0))
+                        new_c["k"], new_c["v"] = kc, vc
+                        o = attention_full(q, kc[si].astype(q.dtype),
+                                           vc[si].astype(q.dtype),
+                                           causal=False, kv_len=pos + 1, par=par)
+                        hh = hh + o.reshape(B, 1, -1) @ pa["wo"]
+                        si += 1
+                if cfg.is_encdec:
+                    hh = _attn_sublayer(hh, pb[f"dec_cross{s}"], cfg, par,
+                                        positions=positions,
+                                        memory=memory.astype(hh.dtype),
+                                        kv_len=mem_len)
+                if cfg.n_experts:
+                    hh, _ = _moe_sublayer(hh, pb[f"moe{s}"], cfg, par)
+                else:
+                    hh = _mlp_sublayer(hh, pb[f"mlp{s}"], cfg, par)
+            return hh, new_c
+
+        h, new_blocks = jax.lax.scan(block, h, (params["blocks"], cache["blocks"]))
+        new_cache = dict(cache, blocks=new_blocks)
+
+    h = rms_norm(h, params["final_ln"], cfg.norm_eps)
+    return logits_fn(params, h, cfg, par), new_cache

@@ -1,0 +1,182 @@
+"""Shared model layers: RMSNorm, RoPE, SwiGLU, attention (full + chunked
+online-softmax "jnp-flash"), KV-cache decode attention.
+
+The chunked path is the TPU-native structure (query tile resident, KV
+streaming) whose fused twin is kernels/attention.py; on CPU/dry-run the jnp
+version is lowered so the roofline sees real FLOPs/bytes.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rms_norm(x, gamma, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def rope_freqs(hd: int, theta: float, dtype=jnp.float32):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=dtype) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs        # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                              # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _gqa_scores(q, k):
+    """q: (B, Sq, Hkv, G, hd); k: (B, Sk, Hkv, hd) -> (B, Hkv, G, Sq, Sk)."""
+    return jnp.einsum("bsngd,btnd->bngst", q, k).astype(jnp.float32)
+
+
+def attention_full(q, k, v, *, causal=True, window=None, q_offset=0,
+                   kv_len=None, par=None):
+    """One-shot masked attention.  q: (B, Sq, H, hd); k/v: (B, Sk, Hkv, hd).
+    `window` may be a traced scalar (hymba's mixed global/local layers).
+    `kv_len` masks padded cache tails (decode).  Returns (B, Sq, H, hd).
+
+    With `par`, scores are constrained to shard the KV-sequence dim over the
+    model axis: head counts rarely divide the TP degree, and without the
+    constraint GSPMD parks the leftover factor on the *contraction* (head_dim)
+    — turning every score block into a partial sum that must be all-reduced
+    (hundreds of GB/step at 32k context; see EXPERIMENTS.md §Perf)."""
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd) * (hd ** -0.5)
+    seq_ok = par is not None and par.tp_size() > 1 and Sk % par.tp_size() == 0
+    dp = par.dp if (par is not None and par.dp and B % par.dp_size() == 0) else None
+    if seq_ok:
+        qg = par.constrain(qg, dp, None, None, None, None)
+        k = par.constrain(k, dp, par.tp, None, None)
+        v = par.constrain(v, dp, par.tp, None, None)
+    s = _gqa_scores(qg, k)                                     # (B,n,G,Sq,Sk)
+    if seq_ok:
+        s = par.constrain(s, dp, None, None, None, par.tp)
+    qi = q_offset + jnp.arange(Sq)[:, None]
+    ki = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    if kv_len is not None:
+        mask &= ki < kv_len
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bngst,btnd->bsngd", p, v)
+    return o.reshape(B, Sq, H, hd)
+
+
+def attention_chunked(q, k, v, *, causal=True, window=None,
+                      q_chunk=256, kv_chunk=1024, par=None):
+    """Online-softmax attention: scan over query tiles, inner scan over KV
+    tiles with running (max, sum) — O(q_chunk * kv_chunk) live memory.
+
+    For sliding-window layers (static `window`) only ceil((window+q_chunk)/
+    kv_chunk) KV tiles are touched per query tile (dynamic_slice), so the
+    FLOPs scale with the window, not the sequence — the property that makes
+    gemma3-style 5:1 patterns profitable at 32k-512k.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    assert Sq % q_chunk == 0 and Sk % kv_chunk == 0, (Sq, Sk, q_chunk, kv_chunk)
+    nq = Sq // q_chunk
+
+    static_window = isinstance(window, int)
+    if static_window:
+        # KV span touched per query tile, rounded to tile size
+        span = window + q_chunk
+        n_kv_tiles = min((span + kv_chunk - 1) // kv_chunk + 1, Sk // kv_chunk)
+    else:
+        n_kv_tiles = Sk // kv_chunk
+
+    qg = (q * (hd ** -0.5)).reshape(B, Sq, Hkv, G, hd)
+    qg = jnp.moveaxis(qg.reshape(B, nq, q_chunk, Hkv, G, hd), 1, 0)  # (nq,B,qc,n,G,hd)
+
+    # shard the QUERY-TILE dim over the model axis: every score tile
+    # (B,n,G,qc/16,kc) is then fully local — no partial-contraction
+    # all-reduce fires inside the double scan (the §Perf fix)
+    tile_ok = par is not None and par.tp_size() > 1 and q_chunk % par.tp_size() == 0
+    dp_e = par.dp if (par is not None and par.dp and B % par.dp_size() == 0) else None
+
+    def q_tile(_, qt_idx):
+        qt, qi0 = qt_idx                                   # (B,qc,n,G,hd), scalar
+        if tile_ok:
+            qt = par.constrain(qt, dp_e, par.tp, None, None, None)
+        if static_window:
+            lo = jnp.maximum(qi0 + q_chunk - (n_kv_tiles * kv_chunk), 0)
+            lo = (lo // kv_chunk) * kv_chunk
+        else:
+            lo = 0
+
+        def kv_tile(carry, i):
+            acc, m_i, l_i = carry
+            k0 = lo + i * kv_chunk
+            kt = jax.lax.dynamic_slice_in_dim(k, k0, kv_chunk, axis=1)
+            vt = jax.lax.dynamic_slice_in_dim(v, k0, kv_chunk, axis=1)
+            if tile_ok:
+                kt = par.constrain(kt, dp_e, None, None, None)
+                vt = par.constrain(vt, dp_e, None, None, None)
+            s = _gqa_scores(qt, kt)                        # (B,n,G,qc,kc)
+            if tile_ok:
+                s = par.constrain(s, dp_e, None, None, par.tp, None)
+            qi = qi0 + jnp.arange(q_chunk)[:, None]
+            ki = k0 + jnp.arange(kv_chunk)[None, :]
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= ki <= qi
+            if window is not None:
+                mask &= ki > qi - window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_i, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m_i - m_new)
+            l_new = alpha * l_i + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bngst,btnd->bngsd", p.astype(vt.dtype), vt).astype(jnp.float32)
+            return (acc, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, Hkv, G, q_chunk, hd), jnp.float32)
+        m0 = jnp.full((B, Hkv, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        (acc, m_i, l_i), _ = jax.lax.scan(kv_tile, (acc0, m0, l0),
+                                          jnp.arange(n_kv_tiles))
+        o = acc / jnp.maximum(l_i, 1e-30)[..., None]       # (B,n,G,qc,hd)
+        return None, o.astype(q.dtype)
+
+    # nested remat: without it the q/kv chunk scans stash per-chunk softmax
+    # residuals for backward (O(S^2 / kv_chunk) live bytes) — with it the
+    # backward recomputes one tile at a time (flash-attention memory law)
+    _, tiles = jax.lax.scan(jax.checkpoint(q_tile), None,
+                            (qg, jnp.arange(nq) * q_chunk))
+    # tiles: (nq, B, n, G, qc, hd) -> (B, Sq, H, hd)
+    o = jnp.moveaxis(tiles, 0, 3)                          # (B,n,G,nq,qc,hd)
+    o = o.reshape(B, Hkv, G, Sq, hd)
+    o = jnp.moveaxis(o, 3, 1).reshape(B, Sq, H, hd)
+    return o
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=None):
+    """Single-token attention against a cache.  q: (B, 1, H, hd);
+    k/v_cache: (B, S_max, Hkv, hd); pos: current position (scalar)."""
+    return attention_full(q, k_cache, v_cache, causal=True, window=window,
+                          q_offset=pos, kv_len=pos + 1)

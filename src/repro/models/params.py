@@ -1,0 +1,78 @@
+"""Parameter definition system: one structure, three views.
+
+`ParamDef` trees describe every weight (shape, dtype, init scale, PartitionSpec).
+From the same tree we derive:
+  - `init_params`   : materialized arrays (real runs, smoke tests)
+  - `param_structs` : ShapeDtypeStruct pytree (dry-run lowering, no allocation)
+  - `param_shardings`: NamedSharding pytree (in_shardings for jit)
+FSDP convention: every >=2D weight is sharded over ('data', ...) on one dim
+and 'model' on another where the math demands it (TP/EP).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["ParamDef", "init_params", "param_structs", "param_shardings",
+           "stack_defs"]
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    spec: tuple = ()            # PartitionSpec entries (axis names / None)
+    init: str = "normal"        # normal | zeros | ones
+    scale: float | None = None  # None -> 1/sqrt(fan_in)
+    dtype: str = "bfloat16"
+
+
+def stack_defs(defs, n: int):
+    """Prepend a stacking dim (scan-over-layers) to every def in a tree."""
+    def one(d: ParamDef) -> ParamDef:
+        return ParamDef((n,) + tuple(d.shape), (None,) + tuple(d.spec),
+                        d.init, d.scale, d.dtype)
+    return jax.tree.map(one, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def _is_def(x):
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs, key):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for d, k in zip(leaves, keys):
+        dt = jnp.dtype(d.dtype)
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dt))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dt))
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            scale = d.scale if d.scale is not None else 1.0 / np.sqrt(fan_in)
+            out.append((jax.random.normal(k, d.shape, jnp.float32) * scale).astype(dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+def param_structs(defs):
+    return jax.tree.map(lambda d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype)),
+                        defs, is_leaf=_is_def)
+
+
+def param_shardings(defs, mesh, fsdp_pod: bool = False):
+    """fsdp_pod=True extends the FSDP shard from 'data' to ('pod','data') —
+    fully flat ZeRO-3 across pods (the baseline the hierarchical layout
+    beats on inter-pod links; see EXPERIMENTS.md §Perf)."""
+    def one(d: ParamDef):
+        if mesh is None:
+            return None
+        spec = tuple(("pod", "data") if (fsdp_pod and e == "data"
+                                         and "pod" in mesh.axis_names) else e
+                     for e in d.spec)
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree.map(one, defs, is_leaf=_is_def)

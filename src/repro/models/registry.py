@@ -1,0 +1,58 @@
+"""Model facade: one entry point per workload kind for every architecture."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import decode as decode_mod
+from repro.models import transformer as tf
+from repro.models.params import (init_params, param_shardings, param_structs)
+from repro.sharding.parallel import Parallelism
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---- parameters -----------------------------------------------------
+    def defs(self):
+        return tf.model_defs(self.cfg)
+
+    def init(self, key):
+        return init_params(self.defs(), key)
+
+    def param_structs(self):
+        return param_structs(self.defs())
+
+    def param_shardings(self, mesh, fsdp_pod: bool = False):
+        return param_shardings(self.defs(), mesh, fsdp_pod=fsdp_pod)
+
+    # ---- compute --------------------------------------------------------
+    def loss(self, params, batch, par: Parallelism, chunked: bool = False):
+        return tf.loss_fn(params, batch, self.cfg, par, chunked=chunked)
+
+    def forward(self, params, batch, par: Parallelism, chunked: bool = False):
+        return tf.forward(params, batch["tokens"], self.cfg, par,
+                          frames=batch.get("frames"), vis=batch.get("vis"),
+                          chunked=chunked)
+
+    def prefill(self, params, batch, par: Parallelism, S_max: int):
+        return decode_mod.prefill(params, batch, self.cfg, par, S_max)
+
+    def decode_step(self, params, cache, tokens, pos, par: Parallelism):
+        return decode_mod.decode_step(params, cache, tokens, pos, self.cfg, par)
+
+    def init_cache(self, B: int, S_max: int):
+        return decode_mod.init_cache(self.cfg, B, S_max)
+
+    def cache_struct(self, B: int, S_max: int):
+        return decode_mod.cache_struct(self.cfg, B, S_max)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

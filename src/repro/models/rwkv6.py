@@ -1,0 +1,140 @@
+"""RWKV6 (Finch) blocks: time-mix with data-dependent decay + channel-mix.
+
+The WKV recurrence runs *chunkwise* in pure JAX (TPU-native: within a chunk
+the recurrence factorizes into two MXU matmuls plus a masked intra-chunk
+product; the O(Dk x Dv) state crosses chunks in a lax.scan).  The Pallas
+kernel (kernels/rwkv.py) is the fused in-VMEM variant of the same math.
+Attention-free: decode state is O(D^2/H) per layer — no KV cache at all,
+which is what makes the long_500k cell trivial for this family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+from repro.models.params import ParamDef
+
+
+def rwkv_defs(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "ln1": ParamDef((d,), (None,), init="ones"),
+        "ln2": ParamDef((d,), (None,), init="ones"),
+        # time-mix
+        "mu_r": ParamDef((d,), (None,), init="zeros"),
+        "mu_k": ParamDef((d,), (None,), init="zeros"),
+        "mu_v": ParamDef((d,), (None,), init="zeros"),
+        "mu_w": ParamDef((d,), (None,), init="zeros"),
+        "mu_g": ParamDef((d,), (None,), init="zeros"),
+        "w_r": ParamDef((d, d), ("data", "model")),
+        "w_k": ParamDef((d, d), ("data", "model")),
+        "w_v": ParamDef((d, d), ("data", "model")),
+        "w_w": ParamDef((d, d), ("data", "model"), scale=1e-2),
+        "w_g": ParamDef((d, d), ("data", "model")),
+        "w_o": ParamDef((d, d), ("model", "data")),
+        "w_bias": ParamDef((d,), (None,), init="zeros"),
+        "u_bonus": ParamDef((d,), (None,), init="zeros"),
+        "ln_x": ParamDef((d,), (None,), init="ones"),
+        # channel-mix
+        "cmu_k": ParamDef((d,), (None,), init="zeros"),
+        "cmu_r": ParamDef((d,), (None,), init="zeros"),
+        "cw_k": ParamDef((d, f), ("data", "model")),
+        "cw_v": ParamDef((f, d), ("model", "data")),
+        "cw_r": ParamDef((d, d), ("data", "model")),
+    }
+
+
+def _token_shift(x, prev):
+    """prev: (B, 1, D) last token of the previous segment (or zeros)."""
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def wkv_chunked(r, k, v, w, u, state, chunk: int = 64):
+    """Chunkwise WKV.  r/k/v: (B, H, S, hd); w: decay in (0,1); u: (H, hd);
+    state: (B, H, hd, hd).  Returns (y, state')."""
+    B, H, S, D = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    logw = jnp.log(jnp.clip(w.astype(jnp.float32), 1e-5, 1.0))
+
+    def split(a):
+        return jnp.moveaxis(a.reshape(B, H, nc, chunk, D), 2, 0)
+
+    rc, kc, vc, lwc = split(r.astype(jnp.float32)), split(k.astype(jnp.float32)), \
+        split(v.astype(jnp.float32)), split(logw)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), -1)    # strictly lower
+
+    def step(s, xs):
+        rt, kt, vt, lw = xs                                      # (B,H,C,D)
+        cs = jnp.cumsum(lw, axis=2)                              # cum log decay
+        cs_prev = cs - lw                                        # up to t-1
+        r_in = rt * jnp.exp(cs_prev)                             # A_{t-1} weight
+        k_out = kt * jnp.exp(-cs)                                # 1/A_s weight
+        # inter-chunk: y_inter = (r * A_{t-1}) @ S
+        y = jnp.einsum("bhtd,bhde->bhte", r_in, s)
+        # intra-chunk strictly-causal term
+        att = jnp.einsum("bhtd,bhsd->bhts", r_in, k_out) * tri[None, None]
+        y = y + jnp.einsum("bhts,bhse->bhte", att, vt)
+        # bonus diagonal term
+        y = y + jnp.einsum("bhtd,bhtd->bht", rt, u[None, :, None] * kt)[..., None] * vt
+        # state update: S' = exp(cs_C) S + sum_s exp(cs_C - cs_s) k_s v_s^T
+        decay_all = jnp.exp(cs[:, :, -1:, :])                    # (B,H,1,D)
+        k_scaled = kt * jnp.exp(cs[:, :, -1:, :] - cs)
+        s = decay_all[:, :, 0, :, None] * s + jnp.einsum("bhsd,bhse->bhde",
+                                                         k_scaled, vt)
+        return s, y
+
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32), (rc, kc, vc, lwc))
+    y = jnp.moveaxis(ys, 0, 2).reshape(B, H, S, D)
+    return y.astype(r.dtype), state
+
+
+def time_mix(x, p, cfg, prev_tok=None, wkv_state=None):
+    """x: (B, S, D).  Returns (out, (last_token, wkv_state))."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+    prev = prev_tok if prev_tok is not None else jnp.zeros((B, 1, D), x.dtype)
+    xs = _token_shift(x, prev)
+
+    def mix(mu):
+        return x + (xs - x) * mu
+
+    r = (mix(p["mu_r"]) @ p["w_r"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = (mix(p["mu_k"]) @ p["w_k"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    v = (mix(p["mu_v"]) @ p["w_v"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(mix(p["mu_g"]) @ p["w_g"])
+    w = jnp.exp(-jnp.exp((mix(p["mu_w"]) @ p["w_w"] + p["w_bias"])
+                         .astype(jnp.float32)))                  # (B,S,D) in (0,1)
+    w = w.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    u = p["u_bonus"].reshape(H, hd)
+    s0 = wkv_state if wkv_state is not None else jnp.zeros((B, H, hd, hd), jnp.float32)
+    y, s1 = wkv_chunked(r, k, v, w, u, s0)
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, D)
+    y = rms_norm(y, p["ln_x"], 1e-5) * g
+    return y @ p["w_o"], (x[:, -1:], s1)
+
+
+def channel_mix(x, p, prev_tok=None):
+    B, S, D = x.shape
+    prev = prev_tok if prev_tok is not None else jnp.zeros((B, 1, D), x.dtype)
+    xs = _token_shift(x, prev)
+    xk = x + (xs - x) * p["cmu_k"]
+    xr = x + (xs - x) * p["cmu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["cw_k"]))
+    return jax.nn.sigmoid(xr @ p["cw_r"]) * (k @ p["cw_v"]), x[:, -1:]
+
+
+def rwkv_block(x, p, cfg, cache=None):
+    """cache: dict(tm_tok, wkv, cm_tok) or None.  Returns (x, new_cache)."""
+    tm_tok = cache["tm_tok"] if cache else None
+    wkv = cache["wkv"] if cache else None
+    cm_tok = cache["cm_tok"] if cache else None
+    h, (tm_tok_n, wkv_n) = time_mix(rms_norm(x, p["ln1"]), p, cfg, tm_tok, wkv)
+    x = x + h
+    h, cm_tok_n = channel_mix(rms_norm(x, p["ln2"]), p, cm_tok)
+    x = x + h
+    return x, {"tm_tok": tm_tok_n, "wkv": wkv_n, "cm_tok": cm_tok_n}

@@ -1,0 +1,93 @@
+"""Selective SSM (Mamba-style) head for hymba's hybrid layers.
+
+Diagonal selective state space:  h_t = exp(A dt_t) h_{t-1} + dt_t B_t x_t,
+y_t = C_t . h_t + D x_t, with dt/B/C data-dependent.  Time is processed in
+chunks (lax.scan carrying h) with an associative scan inside each chunk —
+O(chunk) live memory, sub-quadratic in S (this is what qualifies hymba for
+the long_500k shape).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef
+
+
+def ssm_defs(cfg):
+    d, n = cfg.d_model, cfg.ssm_state
+    return {
+        "in_proj": ParamDef((d, d), ("data", "model")),
+        "dt_proj": ParamDef((d, 1), ("data", None)),
+        "B_proj": ParamDef((d, n), ("data", None)),
+        "C_proj": ParamDef((d, n), ("data", None)),
+        "A_log": ParamDef((d, n), ("model", None), init="zeros"),
+        "D_skip": ParamDef((d,), (None,), init="ones"),
+        "conv_w": ParamDef((4, d), (None, "model"), init="zeros"),
+        "out_proj": ParamDef((d, d), ("model", "data")),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv, width 4.  x: (B, S, D); w: (4, D)."""
+    pads = [jnp.pad(x, ((0, 0), (k, 0), (0, 0)))[:, :x.shape[1]] for k in range(4)]
+    return sum(p * w[3 - k][None, None, :] for k, p in enumerate(pads))
+
+
+def selective_scan(a, b, C, chunk: int = 256):
+    """h_t = a_t * h_{t-1} + b_t; y_t = C_t . h_t, contracted PER CHUNK so
+    the (B, S, D, N) state trajectory never materializes in HBM (live set is
+    O(chunk), the property that keeps hymba's 32k prefill resident).
+    a, b: (B, S, D, N); C: (B, S, N) -> (y (B, S, D), h_last)."""
+    B, S, D, N = a.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, b1 * a2 + b2
+
+    def step(h, xs):
+        ac, bc, cc = xs                              # (chunk, B, D, N)/(chunk, B, N)
+        aa, bb = jax.lax.associative_scan(combine, (ac, bc), axis=0)
+        hs = aa * h[None] + bb                       # states for this chunk only
+        y = jnp.einsum("cbdn,cbn->cbd", hs, cc)
+        return hs[-1], y
+
+    a_c = jnp.moveaxis(a.reshape(B, nc, chunk, D, N), (1, 2), (0, 1))
+    b_c = jnp.moveaxis(b.reshape(B, nc, chunk, D, N), (1, 2), (0, 1))
+    c_c = jnp.moveaxis(C.reshape(B, nc, chunk, N), (1, 2), (0, 1))
+    h0 = jnp.zeros((B, D, N), a.dtype)
+    h_last, ys = jax.lax.scan(jax.checkpoint(step), h0, (a_c, b_c, c_c))
+    y = jnp.moveaxis(ys, (0, 1), (1, 2)).reshape(B, S, D)
+    return y, h_last
+
+
+def ssm_head(x, p, cfg, h0=None):
+    """x: (B, S, D) -> (y, h_last).  h0: (B, D, N) decode state."""
+    B, S, D = x.shape
+    N = cfg.ssm_state
+    xi = x @ p["in_proj"]
+    xi = jax.nn.silu(_causal_conv(xi, p["conv_w"]) + xi)
+    dt = jax.nn.softplus((xi @ p["dt_proj"]))                    # (B,S,1)
+    Bm = xi @ p["B_proj"]                                        # (B,S,N)
+    Cm = xi @ p["C_proj"]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # (D,N) neg
+    a = jnp.exp(dt[..., None] * A[None, None])                   # (B,S,D,N)
+    b = (dt[..., None] * Bm[:, :, None, :]) * xi[..., None]      # (B,S,D,N)
+    if h0 is None:
+        y_state, h_last = selective_scan(a.astype(jnp.float32),
+                                         b.astype(jnp.float32),
+                                         Cm.astype(jnp.float32))
+        y_state = y_state.astype(x.dtype)
+    else:                                                        # decode (S small)
+        def step(h, t):
+            h = a[:, t].astype(jnp.float32) * h + b[:, t].astype(jnp.float32)
+            return h, h
+        h_last, hs = jax.lax.scan(step, h0, jnp.arange(S))
+        hs = jnp.moveaxis(hs, 0, 1)
+        y_state = jnp.einsum("bsdn,bsn->bsd", hs.astype(x.dtype), Cm)
+    y = y_state + xi * p["D_skip"]
+    return y @ p["out_proj"], h_last

@@ -1,0 +1,308 @@
+"""Decoder/encoder-decoder transformer stack covering all assigned families.
+
+One scan-over-superblocks drives every architecture: a *superblock* is the
+repeating layer pattern (dense: 1 layer; gemma3: 5 local + 1 global; vlm:
+4 self + 1 cross; moe: attn + expert FFN; hymba: parallel attn+SSM; rwkv6:
+time-mix + channel-mix).  Params are stacked over superblocks so the HLO is
+one rolled loop — essential for 512-way GSPMD compile times.
+
+KV caches for sliding-window layers are RING BUFFERS of length `window`
+(a 512k-context gemma3 decode keeps 40/48 layers at window size — the reason
+the long_500k cell fits).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (apply_rope, attention_chunked, attention_full,
+                                 decode_attention, rms_norm, swiglu)
+from repro.models.params import ParamDef, stack_defs
+
+MAX_DECODE_LEN = {"decode_32k": 32768, "long_500k": 524288}
+
+
+# ============================================================ param defs ====
+def attn_defs(cfg):
+    d, hd, H, Hkv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    defs = {
+        "ln": ParamDef((d,), (None,), init="ones"),
+        "wq": ParamDef((d, H * hd), ("data", "model")),
+        "wk": ParamDef((d, Hkv * hd), ("data", "model")),
+        "wv": ParamDef((d, Hkv * hd), ("data", "model")),
+        "wo": ParamDef((H * hd, d), ("model", "data")),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((hd,), (None,), init="ones")
+        defs["k_norm"] = ParamDef((hd,), (None,), init="ones")
+    return defs
+
+
+def mlp_defs(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "ln": ParamDef((d,), (None,), init="ones"),
+        "w_gate": ParamDef((d, f), ("data", "model")),
+        "w_up": ParamDef((d, f), ("data", "model")),
+        "w_down": ParamDef((f, d), ("model", "data")),
+    }
+
+
+def superblock_defs(cfg, decoder=True):
+    """Param defs for ONE superblock of the given family."""
+    fam = cfg.family
+    if fam == "ssm":
+        return {"rwkv": rwkv_mod.rwkv_defs(cfg)}
+    blocks = {}
+    period = _period(cfg)
+    for s in range(period):
+        kind = _sublayer_kind(cfg, s, decoder)
+        if kind in ("attn", "attn_local", "attn_global", "attn_bidir"):
+            blocks[f"attn{s}"] = attn_defs(cfg)
+        elif kind == "cross":
+            blocks[f"cross{s}"] = attn_defs(cfg)
+        if fam == "hybrid":
+            blocks[f"ssm{s}"] = ssm_mod.ssm_defs(cfg)
+        if cfg.n_experts and decoder:
+            blocks[f"moe{s}"] = dict(moe_mod.moe_defs(cfg),
+                                     ln=ParamDef((cfg.d_model,), (None,), init="ones"))
+        else:
+            blocks[f"mlp{s}"] = mlp_defs(cfg)
+        if fam == "encdec" and decoder:
+            blocks[f"dec_cross{s}"] = attn_defs(cfg)
+    return blocks
+
+
+def _period(cfg) -> int:
+    if cfg.swa_period:
+        return cfg.swa_period
+    if cfg.cross_attn_period:
+        return cfg.cross_attn_period
+    return 1
+
+
+def _n_superblocks(cfg, decoder=True) -> int:
+    n = cfg.n_layers if decoder else cfg.n_enc_layers
+    period = _period(cfg) if decoder else 1
+    assert n % period == 0, (n, period)
+    return n // period
+
+
+def _sublayer_kind(cfg, s, decoder=True) -> str:
+    if not decoder:
+        return "attn_bidir"
+    if cfg.swa_period:
+        return "attn_local" if s < cfg.swa_period - 1 else "attn_global"
+    if cfg.cross_attn_period:
+        return "cross" if s == cfg.cross_attn_period - 1 else "attn"
+    return "attn"
+
+
+def padded_vocab(cfg) -> int:
+    """Embedding tables padded to a 256 multiple so the vocab dim shards
+    evenly over any mesh axis (labels never index the padding)."""
+    return -(-cfg.vocab // 256) * 256
+
+
+def model_defs(cfg):
+    d = cfg.d_model
+    vp = padded_vocab(cfg)
+    defs = {
+        "embed": ParamDef((vp, d), ("model", "data"), scale=0.02),
+        "final_ln": ParamDef((d,), (None,), init="ones"),
+        "blocks": stack_defs(superblock_defs(cfg, decoder=True),
+                             _n_superblocks(cfg)),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((d, vp), ("data", "model"), scale=0.02)
+    if cfg.is_encdec:
+        defs["enc_blocks"] = stack_defs(superblock_defs(cfg, decoder=False),
+                                        cfg.n_enc_layers)
+        defs["enc_ln"] = ParamDef((d,), (None,), init="ones")
+    return defs
+
+
+# =========================================================== sub-layers =====
+def _attn_sublayer(h, p, cfg, par, *, positions, causal=True, window=None,
+                   memory=None, chunked=False, kv_len=None):
+    """Pre-norm attention (self or cross) with residual."""
+    B, S, D = h.shape
+    hd, H, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    x = rms_norm(h, p["ln"], cfg.norm_eps)
+    src = x if memory is None else memory
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (src @ p["wk"]).reshape(B, src.shape[1], Hkv, hd)
+    v = (src @ p["wv"]).reshape(B, src.shape[1], Hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if memory is None:                       # RoPE only for self-attention
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if memory is not None:
+        o = attention_full(q, k, v, causal=False, kv_len=kv_len, par=par)
+    elif chunked:
+        o = attention_chunked(q, k, v, causal=causal, window=window,
+                              q_chunk=par.q_chunk, kv_chunk=par.kv_chunk,
+                              par=par)
+    else:
+        o = attention_full(q, k, v, causal=causal, window=window, par=par)
+    o = o.reshape(B, S, H * hd) @ p["wo"]
+    return h + par.constrain(o, par.dp, None, None)
+
+
+def _mlp_sublayer(h, p, cfg, par):
+    x = rms_norm(h, p["ln"], cfg.norm_eps)
+    return h + par.constrain(swiglu(x, p["w_gate"], p["w_up"], p["w_down"]),
+                             par.dp, None, None)
+
+
+def _moe_sublayer(h, p, cfg, par):
+    x = rms_norm(h, p["ln"], cfg.norm_eps)
+    y, aux = moe_mod.moe_ffn(x, p, cfg, par)
+    return h + par.constrain(y, par.dp, None, None), aux
+
+
+def _hybrid_sublayer(h, p_attn, p_ssm, cfg, par, *, positions, window, chunked):
+    """hymba: attention and SSM heads in parallel, outputs fused (mean)."""
+    x = rms_norm(h, p_attn["ln"], cfg.norm_eps)
+    B, S, D = x.shape
+    hd, H, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = apply_rope((x @ p_attn["wq"]).reshape(B, S, H, hd), positions, cfg.rope_theta)
+    k = apply_rope((x @ p_attn["wk"]).reshape(B, S, Hkv, hd), positions, cfg.rope_theta)
+    v = (x @ p_attn["wv"]).reshape(B, S, Hkv, hd)
+    # window may be traced (per-layer global flag) -> masked full attention
+    o_attn = attention_full(q, k, v, causal=True, window=window, par=par) \
+        if not chunked else attention_chunked(q, k, v, causal=True, window=None,
+                                              q_chunk=par.q_chunk,
+                                              kv_chunk=par.kv_chunk, par=par)
+    o_attn = o_attn.reshape(B, S, H * hd) @ p_attn["wo"]
+    o_ssm, _ = ssm_mod.ssm_head(x, p_ssm, cfg)
+    return h + par.constrain(0.5 * (o_attn + o_ssm), par.dp, None, None)
+
+
+# ============================================================= forward ======
+def forward(params, tokens, cfg, par, *, frames=None, vis=None, chunked=False):
+    """Full-sequence forward -> final hidden states (B, S, D)."""
+    B, S = tokens.shape
+    emb = params["embed"]
+    h = emb[tokens].astype(jnp.dtype(cfg.dtype))  # gather, sharded over model? keep auto
+    h = par.constrain(h, par.dp, None, None)
+    positions = jnp.arange(S)
+
+    memory = None
+    if cfg.is_encdec:
+        assert frames is not None
+        m = par.constrain(frames.astype(h.dtype), par.dp, None, None)
+        enc_positions = jnp.arange(frames.shape[1])
+
+        def enc_block(mh, pb):
+            mh = _attn_sublayer(mh, pb["attn0"], cfg, par, positions=enc_positions,
+                                causal=False, chunked=chunked)
+            mh = _mlp_sublayer(mh, pb["mlp0"], cfg, par)
+            return mh, None
+        fn = jax.checkpoint(enc_block) if par.remat else enc_block
+        m, _ = jax.lax.scan(lambda c, pb: fn(c, pb), m, params["enc_blocks"])
+        memory = rms_norm(m, params["enc_ln"], cfg.norm_eps)
+    if cfg.family == "vlm":
+        assert vis is not None
+        memory = par.constrain(vis.astype(h.dtype), par.dp, None, None)
+
+    n_sb = _n_superblocks(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family == "ssm":
+        def block(carry, pb):
+            hh, _ = rwkv_mod.rwkv_block(carry, pb["rwkv"], cfg)
+            return hh, jnp.zeros(())
+        fn = jax.checkpoint(block) if par.remat else block
+        h, _ = jax.lax.scan(fn, h, params["blocks"])
+    elif cfg.family == "hybrid":
+        is_global = jnp.asarray([1 if i in cfg.global_layers else 0
+                                 for i in range(n_sb)], jnp.int32)
+
+        def block(carry, xs):
+            pb, glob = xs
+            win = jnp.where(glob > 0, S + 1, cfg.sliding_window)
+            hh = _hybrid_sublayer(carry, pb["attn0"], pb["ssm0"], cfg, par,
+                                  positions=positions, window=win, chunked=False)
+            hh = _mlp_sublayer(hh, pb["mlp0"], cfg, par)
+            return hh, jnp.zeros(())
+        fn = jax.checkpoint(block) if par.remat else block
+        h, _ = jax.lax.scan(fn, h, (params["blocks"], is_global))
+    else:
+        def block(carry, pb):
+            hh, aux = carry
+            for s in range(_period(cfg)):
+                kind = _sublayer_kind(cfg, s)
+                if kind == "cross":
+                    hh = _attn_sublayer(hh, pb[f"cross{s}"], cfg, par,
+                                        positions=positions, memory=memory)
+                elif kind == "attn_local":
+                    hh = _attn_sublayer(hh, pb[f"attn{s}"], cfg, par,
+                                        positions=positions, causal=True,
+                                        window=cfg.sliding_window, chunked=chunked)
+                else:
+                    hh = _attn_sublayer(hh, pb[f"attn{s}"], cfg, par,
+                                        positions=positions, causal=True,
+                                        chunked=chunked)
+                if cfg.is_encdec:
+                    hh = _attn_sublayer(hh, pb[f"dec_cross{s}"], cfg, par,
+                                        positions=positions, memory=memory)
+                if cfg.n_experts:
+                    hh, aux_l = _moe_sublayer(hh, pb[f"moe{s}"], cfg, par)
+                    aux = aux + aux_l
+                else:
+                    hh = _mlp_sublayer(hh, pb[f"mlp{s}"], cfg, par)
+            return (hh, aux), None
+        fn = jax.checkpoint(block) if par.remat else block
+        (h, aux_total), _ = jax.lax.scan(fn, (h, aux_total), params["blocks"])
+
+    h = rms_norm(h, params["final_ln"], cfg.norm_eps)
+    return h, aux_total
+
+
+def logits_fn(params, h, cfg, par):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ w.astype(h.dtype)
+    return par.constrain(logits, par.dp, None, par.tp)
+
+
+def chunked_xent(params, h, labels, cfg, par, chunk: int = 512):
+    """Vocab-sharded, sequence-chunked softmax cross-entropy (the full
+    (B, S, V) logits tensor never materializes)."""
+    B, S, D = h.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+
+    def step(acc, i):
+        hs = jax.lax.dynamic_slice_in_dim(h, i * chunk, chunk, axis=1)
+        ls = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, axis=1)
+        logits = par.constrain((hs @ w.astype(hs.dtype)).astype(jnp.float32),
+                               par.dp, None, par.tp)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ls[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    # remat each vocab chunk: the (B, chunk, V) logits block is recomputed in
+    # backward instead of living across the whole loss scan
+    total, _ = jax.lax.scan(jax.checkpoint(step), jnp.zeros((), jnp.float32),
+                            jnp.arange(nc))
+    return total / (B * S)
+
+
+def loss_fn(params, batch, cfg, par, chunked=False):
+    h, aux = forward(params, batch["tokens"], cfg, par,
+                     frames=batch.get("frames"), vis=batch.get("vis"),
+                     chunked=chunked)
+    ce = chunked_xent(params, h, batch["labels"], cfg, par)
+    return ce + 0.01 * aux, {"ce": ce, "aux": aux}

@@ -1,0 +1,114 @@
+"""Batched serving engine: continuous batching over a fixed slot grid.
+
+Requests arrive with prompts of varying length; the engine packs them into
+B slots, prefills (per-request left-padded into the shared S_max cache) and
+decodes one token per step for every live slot, retiring finished slots and
+admitting queued requests (slot reuse = continuous batching).  Decode is one
+jit'd step — the production path lowered in the decode_* dry-run cells.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.parallel import Parallelism
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new: int = 16
+    out: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model, params, B: int = 4, S_max: int = 128,
+                 par: Parallelism = Parallelism(remat=False)):
+        self.model, self.params, self.B, self.S_max, self.par = \
+            model, params, B, S_max, par
+        self.queue: list[Request] = []
+        self.slots: list[Request | None] = [None] * B
+        self.pos = 0
+        self.cache = None
+        self.finished: list[Request] = []
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model.decode_step(p, c, t, pos, par))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit_and_prefill(self):
+        """Pack queued prompts to a common length and prefill the batch."""
+        newly = []
+        for i in range(self.B):
+            if self.slots[i] is None and self.queue:
+                self.slots[i] = self.queue.pop(0)
+                newly.append(i)
+        live = [r for r in self.slots if r is not None]
+        if not live:
+            return False
+        # context = prompt + already-generated tokens (batch-boundary refill
+        # must not lose the continuation of still-running requests)
+        ctx = {i: (r.prompt + r.out) for i, r in enumerate(self.slots)
+               if r is not None}
+        L = max(len(c) for c in ctx.values())
+        toks = np.zeros((self.B, L), np.int32)
+        for i, c in ctx.items():    # right-align so decode position is shared
+            toks[i, L - len(c):] = c
+        batch = {"tokens": jnp.asarray(toks)}
+        self.cache, logits = self.model.prefill(self.params, batch, self.par,
+                                                S_max=self.S_max)
+        self.pos = L
+        tok = jnp.argmax(logits[:, -1, :], axis=-1)
+        for i, r in enumerate(self.slots):
+            if r is not None:
+                r.out.append(int(tok[i]))
+                self._retire(i)
+        self._next = tok[:, None].astype(jnp.int32)
+        return True
+
+    def _retire(self, i):
+        r = self.slots[i]
+        if r is not None and len(r.out) >= r.max_new:
+            r.done = True
+            self.finished.append(r)
+            self.slots[i] = None    # slot reuse (continuous batching)
+
+    def step(self):
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          self._next, jnp.int32(self.pos))
+        self.pos += 1
+        tok = jnp.argmax(logits[:, -1, :], axis=-1)
+        self._next = tok[:, None].astype(jnp.int32)
+        for i, r in enumerate(self.slots):
+            if r is None or r.done:
+                continue
+            r.out.append(int(tok[i]))
+            self._retire(i)
+
+    def run(self, max_steps: int = 64) -> list[Request]:
+        if not self._admit_and_prefill():
+            return self.finished
+        for _ in range(max_steps):
+            if all(s is None for s in self.slots):
+                if not self.queue:
+                    break
+                if not self._admit_and_prefill():
+                    break
+                continue
+            if any(s is None for s in self.slots) and self.queue:
+                # batch boundary: refill free slots (continuous batching);
+                # running requests keep their full context via re-prefill
+                if not self._admit_and_prefill():
+                    break
+                continue
+            self.step()
+            if self.pos >= self.S_max - 1:
+                break
+        self.finished.extend(r for r in self.slots if r is not None)
+        return self.finished

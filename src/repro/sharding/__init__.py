@@ -1,0 +1,1 @@
+from repro.sharding.parallel import Parallelism  # noqa: F401

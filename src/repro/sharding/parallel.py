@@ -1,0 +1,68 @@
+"""Parallelism descriptor threaded through the model code.
+
+Mesh conventions (launch/mesh.py):
+  single pod : (data=16, model=16)            axes ('data', 'model')
+  multi-pod  : (pod=2, data=16, model=16)     axes ('pod', 'data', 'model')
+
+`data_axes` (possibly ('pod','data')) carry DP + FSDP; `model_axis` carries
+TP and expert parallelism.  `hierarchical=True` enables the paper-derived
+HSDX-style collectives (two-stage grad all-reduce / a2a) where applicable.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["Parallelism"]
+
+
+@dataclass(frozen=True)
+class Parallelism:
+    mesh: Any = None                      # jax.sharding.Mesh | None
+    data_axes: tuple = ()                 # e.g. ('data',) or ('pod', 'data')
+    model_axis: str | None = None
+    pod_axis: str | None = None
+    hierarchical: bool = True             # HSDX-style collectives
+    moe_seq_shard: bool = False           # sequence-shard tokens over TP before
+                                          # routing (kills the n_model-times
+                                          # replicated dispatch; see §Perf)
+    remat: bool = True
+    # attention chunking (jnp flash); tuned per shape by launch code
+    q_chunk: int = 256
+    kv_chunk: int = 1024
+    use_pallas: bool = False              # route hot spots through kernels/
+
+    @property
+    def dp(self):
+        """Spec entry for the batch dimension."""
+        return self.data_axes if self.data_axes else None
+
+    @property
+    def tp(self):
+        return self.model_axis
+
+    def dp_size(self) -> int:
+        if not self.mesh or not self.data_axes:
+            return 1
+        out = 1
+        for a in self.data_axes:
+            out *= self.mesh.shape[a]
+        return out
+
+    def tp_size(self) -> int:
+        if not self.mesh or not self.model_axis:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    def constrain(self, x, *spec):
+        """with_sharding_constraint when a mesh is active; no-op otherwise."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, P(*spec)))
+
+
+NONE = Parallelism()

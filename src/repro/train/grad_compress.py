@@ -1,0 +1,44 @@
+"""Error-feedback gradient compression for the DP all-reduce.
+
+int8 stochastic-free quantization with per-tensor scale + local error
+feedback (residual carried to the next step), the standard trick for
+shrinking inter-pod gradient traffic by 4x when the `pod` axis is the
+scarce link — complementary to the hierarchical (HSDX-style) all-reduce.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, errors):
+    """Returns (quantized tree, scales tree, new error-feedback tree)."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = quantize_int8(g32)
+        deq = dequantize_int8(q, s)
+        return q, s, g32 - deq
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(errors)
+    qs, ss, es = zip(*[one(g, e) for g, e in zip(flat_g, flat_e)])
+    return (jax.tree.unflatten(treedef, list(qs)),
+            jax.tree.unflatten(treedef, list(ss)),
+            jax.tree.unflatten(treedef, list(es)))
+
+
+def decompress_tree(qs, ss):
+    return jax.tree.map(dequantize_int8, qs, ss)
+
+
+def init_errors(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

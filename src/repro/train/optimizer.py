@@ -1,0 +1,87 @@
+"""Hand-rolled AdamW with fp32 master weights and global-norm clipping.
+
+Params live in bf16 (forward/backward); the optimizer state keeps fp32
+master + first/second moments, all sharded identically to the params (the
+ZeRO-3 layout), so the per-device optimizer footprint is params*12B/shards.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup: int = 100
+    total_steps: int = 10_000
+
+
+class OptState(NamedTuple):
+    master: Any      # fp32 copies of params
+    m: Any
+    v: Any
+    step: jnp.ndarray
+
+
+def init_opt_state(params) -> OptState:
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(jax.tree.map(f32, params), jax.tree.map(zeros, params),
+                    jax.tree.map(zeros, params), jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def adamw_update(grads, opt: OptState, cfg: AdamWConfig, param_dtype=jnp.bfloat16):
+    """Returns (new_params, new_opt_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = opt.step + 1
+    lr = lr_schedule(cfg, step)
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, master, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        master = master - lr * (update + cfg.weight_decay * master)
+        return master, m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_ma = jax.tree.leaves(opt.master)
+    flat_m = jax.tree.leaves(opt.m)
+    flat_v = jax.tree.leaves(opt.v)
+    new_ma, new_m, new_v = [], [], []
+    for g, ma, m, v in zip(flat_g, flat_ma, flat_m, flat_v):
+        a, b, c = upd(g, ma, m, v)
+        new_ma.append(a)
+        new_m.append(b)
+        new_v.append(c)
+    master = jax.tree.unflatten(treedef, new_ma)
+    params = jax.tree.map(lambda p: p.astype(param_dtype), master)
+    new_opt = OptState(master, jax.tree.unflatten(treedef, new_m),
+                       jax.tree.unflatten(treedef, new_v), step)
+    return params, new_opt, {"grad_norm": gnorm, "lr": lr}

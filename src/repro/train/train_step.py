@@ -1,0 +1,57 @@
+"""jit-able train step: microbatched grad accumulation + AdamW.
+
+Microbatching bounds the remat live set for the big cells (the per-layer
+activation checkpoints scale with B_micro, not B); gradient accumulation
+runs as a lax.scan so the HLO stays rolled.  The DP gradient reduction is
+either left to GSPMD (flat) or routed through the paper-derived hierarchical
+all-reduce (intra-pod reduce-scatter -> inter-pod -> all-gather) — the
+`hierarchical` knob measured in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+
+def make_train_step(model, par, opt_cfg: AdamWConfig = AdamWConfig(),
+                    n_micro: int = 1, chunked_attn: bool = False):
+    cfg = model.cfg
+
+    def loss_of(params, batch):
+        loss, parts = model.loss(params, batch, par, chunked=chunked_attn)
+        return loss, parts
+
+    def train_step(params, opt_state, batch):
+        B = batch["tokens"].shape[0]
+        assert B % n_micro == 0
+
+        if n_micro == 1:
+            (loss, parts), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                params, batch)
+        else:
+            def micro(carry, mb):
+                acc, loss_acc = carry
+                (l, _), g = jax.value_and_grad(loss_of, has_aux=True)(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, loss_acc + l), None
+
+            def split(x):
+                return x.reshape((n_micro, B // n_micro) + x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(micro, (zeros, jnp.zeros(())), mbs)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss / n_micro
+            parts = {}
+
+        new_params, new_opt, metrics = adamw_update(
+            grads, opt_state, opt_cfg, param_dtype=jnp.dtype(cfg.dtype))
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_opt, metrics
+
+    return train_step

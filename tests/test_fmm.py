@@ -1,0 +1,80 @@
+"""End-to-end FMM accuracy vs the O(N^2) direct oracle."""
+import numpy as np
+import pytest
+
+from repro.core.distributions import make_distribution
+from repro.core.fmm import direct_potential, fmm_potential
+from repro.core.tree import build_tree
+from repro.core.traversal import dual_traversal
+
+
+@pytest.mark.parametrize("dist", ["cube", "sphere"])
+def test_fmm_matches_direct(dist):
+    n = 2000
+    x = make_distribution(dist, n, seed=1)
+    q = np.random.default_rng(2).uniform(-1, 1, n)
+    phi = fmm_potential(x, q, theta=0.5, ncrit=64)
+    ref = direct_potential(x, q)
+    err = np.linalg.norm(phi - ref) / np.linalg.norm(ref)
+    assert err < 2e-3, f"{dist}: rel err {err}"
+
+
+def test_fmm_plummer_adaptive():
+    n = 1500
+    x = make_distribution("plummer", n, seed=3)
+    q = np.ones(n) / n
+    phi = fmm_potential(x, q, theta=0.4, ncrit=32)
+    ref = direct_potential(x, q)
+    err = np.linalg.norm(phi - ref) / np.linalg.norm(ref)
+    assert err < 2e-3, err
+
+
+def test_tree_invariants():
+    n = 3000
+    x = make_distribution("sphere", n, seed=5)
+    t = build_tree(x, np.ones(n), ncrit=48)
+    # every body in exactly one leaf
+    leaves = t.leaves
+    total = t.n_body[leaves].sum()
+    assert total == n
+    # children partition the parent's body range
+    for c in range(t.n_cells):
+        if t.n_child[c]:
+            cs, nc = t.child_start[c], t.n_child[c]
+            assert t.n_body[cs:cs + nc].sum() == t.n_body[c]
+            assert t.body_start[cs] == t.body_start[c]
+        # tight bbox: center/radius consistent with bounds
+        assert np.all(t.bbox_min[c] <= t.bbox_max[c])
+    # tight boxes nest within parents
+    for c in range(1, t.n_cells):
+        p = t.parent[c]
+        assert np.all(t.bbox_min[c] >= t.bbox_min[p] - 1e-12)
+        assert np.all(t.bbox_max[c] <= t.bbox_max[p] + 1e-12)
+
+
+def test_traversal_covers_all_pairs():
+    """Every (target leaf body, source leaf body) pair is covered exactly once
+    by either an M2L ancestor pair or a P2P leaf pair."""
+    n = 600
+    x = make_distribution("cube", n, seed=7)
+    t = build_tree(x, np.ones(n), ncrit=24)
+    m2l, p2p = dual_traversal(t, t, theta=0.5)
+
+    def descendant_leaves(c):
+        out, stack = [], [c]
+        while stack:
+            k = stack.pop()
+            if t.n_child[k] == 0:
+                out.append(k)
+            else:
+                stack.extend(range(t.child_start[k], t.child_start[k] + t.n_child[k]))
+        return out
+
+    nl = len(t.leaves)
+    leaf_pos = {c: i for i, c in enumerate(t.leaves)}
+    cover = np.zeros((nl, nl), dtype=np.int32)
+    for a, b in np.concatenate([m2l, p2p]):
+        for la in descendant_leaves(a):
+            for lb in descendant_leaves(b):
+                cover[leaf_pos[la], leaf_pos[lb]] += 1
+    assert (cover == 1).all(), "interaction coverage must be exact and unique"

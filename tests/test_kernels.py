@@ -1,0 +1,117 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------- p2p ------
+@pytest.mark.parametrize("P,S,T", [(1, 64, 64), (3, 128, 100), (2, 32, 300)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_p2p_kernel_matches_ref(P, S, T, dtype):
+    rng = np.random.default_rng(P * 1000 + S + T)
+    q = jnp.asarray(rng.uniform(-1, 1, (P, S)), dtype)
+    xs = jnp.asarray(rng.uniform(-1, 1, (P, S, 3)), dtype)
+    xt = jnp.asarray(rng.uniform(-1, 1, (P, T, 3)), dtype)
+    got = ops.p2p_blocked(q, xs, xt)
+    want = ref.p2p_ref(q, xs, xt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_p2p_kernel_self_pair_zero_diag():
+    """Targets == sources: the r=0 self term contributes exactly 0."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.uniform(-1, 1, (1, 64, 3)), jnp.float32)
+    q = jnp.ones((1, 64), jnp.float32)
+    got = ops.p2p_blocked(q, x, x)
+    want = ref.p2p_ref(q, x, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5)
+    assert np.all(np.isfinite(np.asarray(got)))
+
+
+def test_p2p_padded_sources_ignored():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.uniform(-1, 1, (2, 64)), jnp.float32).at[:, 40:].set(0.0)
+    xs = jnp.asarray(rng.uniform(-1, 1, (2, 64, 3)), jnp.float32)
+    xt = jnp.asarray(rng.uniform(2, 3, (2, 16, 3)), jnp.float32)
+    got = ops.p2p_blocked(q, xs, xt)
+    want = ref.p2p_ref(q[:, :40], xs[:, :40], xt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------- attention ------
+@pytest.mark.parametrize("B,H,Hkv,S,D", [
+    (1, 4, 4, 128, 64),     # MHA
+    (2, 4, 2, 256, 64),     # GQA group 2
+    (1, 8, 2, 128, 128),    # GQA group 4, MXU-aligned D
+    (1, 2, 1, 200, 64),     # ragged seq (padding path)
+])
+def test_flash_attention_matches_ref(B, H, Hkv, S, D):
+    rng = np.random.default_rng(S + D)
+    q = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, S, D)), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window", [64, 128])
+def test_flash_attention_sliding_window(window):
+    rng = np.random.default_rng(window)
+    q = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=True, window=window)
+    want = ref.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.bfloat16)
+    got = ops.flash_attention(q, k, v)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
+                               np.asarray(want, dtype=np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+# --------------------------------------------------------------- rwkv ------
+@pytest.mark.parametrize("BH,S,D,chunk", [(2, 128, 64, 64), (4, 64, 32, 32),
+                                          (1, 256, 64, 128)])
+def test_wkv_matches_ref(BH, S, D, chunk):
+    rng = np.random.default_rng(S * D)
+    r = jnp.asarray(rng.normal(size=(BH, S, D)) * 0.5, jnp.float32)
+    k = jnp.asarray(rng.normal(size=(BH, S, D)) * 0.5, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(BH, S, D)) * 0.5, jnp.float32)
+    w = jnp.asarray(rng.uniform(0.8, 0.999, (BH, S, D)), jnp.float32)  # decay
+    u = jnp.asarray(rng.normal(size=(BH, D)) * 0.1, jnp.float32)
+    s0 = jnp.zeros((BH, D, D), jnp.float32)
+    y_got, s_got = ops.rwkv6_wkv(r, k, v, w, u, s0, chunk=chunk)
+    y_want, s_want = ref.wkv_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(y_got), np.asarray(y_want),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_got), np.asarray(s_want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_wkv_chunk_invariance():
+    """Chunk size must not change the result (the granularity knob again)."""
+    rng = np.random.default_rng(3)
+    args = [jnp.asarray(rng.normal(size=(2, 128, 32)) * 0.3, jnp.float32)
+            for _ in range(3)]
+    w = jnp.asarray(rng.uniform(0.9, 0.999, (2, 128, 32)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(2, 32)) * 0.1, jnp.float32)
+    s0 = jnp.asarray(rng.normal(size=(2, 32, 32)) * 0.1, jnp.float32)
+    y32, s32 = ops.rwkv6_wkv(args[0], args[1], args[2], w, u, s0, chunk=32)
+    y128, s128 = ops.rwkv6_wkv(args[0], args[1], args[2], w, u, s0, chunk=128)
+    np.testing.assert_allclose(np.asarray(y32), np.asarray(y128), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s32), np.asarray(s128), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,108 @@
+"""Correctness of the Cartesian Taylor operators against direct summation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import multipole as mp
+
+
+def _clusters(seed=0, n=32, sep=6.0):
+    rng = np.random.default_rng(seed)
+    src = rng.uniform(-0.5, 0.5, (n, 3))
+    tgt = rng.uniform(-0.5, 0.5, (n, 3)) + np.array([sep, 0.0, 0.0])
+    q = rng.uniform(-1, 1, n)
+    return jnp.asarray(src), jnp.asarray(q), jnp.asarray(tgt)
+
+
+def _direct(q, src, tgt):
+    d = np.asarray(tgt)[:, None, :] - np.asarray(src)[None, :, :]
+    r = np.sqrt((d ** 2).sum(-1))
+    return (np.asarray(q)[None, :] / r).sum(-1)
+
+
+def test_num_coeffs():
+    assert mp.num_coeffs(4) == 20
+    assert len(mp.multi_indices(3)) == 20
+    assert len(mp.multi_indices(6)) == 84
+
+
+def test_derivs_match_fd():
+    ops = mp.MultipoleOperators(4)
+    d = jnp.array([1.3, -0.7, 2.1])
+    D = ops.derivs(d)
+    # order-0 = G, order-1 = grad G
+    g = 1.0 / np.linalg.norm(d)
+    np.testing.assert_allclose(D[0], g, rtol=1e-6)
+    grad = -np.asarray(d) / np.linalg.norm(d) ** 3
+    # E order-1 rows are (1,0,0), (0,1,0), (0,0,1)
+    np.testing.assert_allclose(D[1:4], grad, rtol=1e-5)
+
+
+def test_p2m_m2p():
+    src, q, tgt = _clusters(sep=8.0)
+    M = mp.p2m(q, src, jnp.zeros(3))
+    phi = mp.m2p(M, tgt, jnp.zeros(3))
+    ref = _direct(q, src, tgt)
+    err = np.linalg.norm(phi - ref) / np.linalg.norm(ref)
+    assert err < 1e-3, err
+
+
+def test_m2m_preserves_field():
+    src, q, tgt = _clusters(sep=10.0)
+    c_child = jnp.asarray(np.mean(np.asarray(src), axis=0))
+    c_parent = c_child + jnp.array([0.3, -0.2, 0.1])
+    M_child = mp.p2m(q, src, c_child)
+    M_parent = mp.m2m(M_child, c_child - c_parent)
+    M_direct = mp.p2m(q, src, c_parent)
+    phi_t = mp.m2p(M_parent, tgt, c_parent)
+    phi_d = mp.m2p(M_direct, tgt, c_parent)
+    np.testing.assert_allclose(phi_t, phi_d, rtol=1e-5, atol=1e-7)
+
+
+def test_m2l_l2l_l2p_chain():
+    src, q, tgt = _clusters(sep=6.0, n=48)
+    c_src = jnp.asarray(np.mean(np.asarray(src), axis=0))
+    c_tgt = jnp.asarray(np.mean(np.asarray(tgt), axis=0))
+    M = mp.p2m(q, src, c_src)
+    L = mp.m2l(M, c_tgt - c_src)
+    phi = mp.l2p(L, tgt, c_tgt)
+    ref = _direct(q, src, tgt)
+    err = np.linalg.norm(np.asarray(phi) - ref) / np.linalg.norm(ref)
+    assert err < 2e-3, err
+    # chain through an intermediate L2L hop
+    c_mid = c_tgt + jnp.array([0.2, 0.1, -0.15])
+    L_mid = mp.m2l(M, c_mid - c_src)
+    L2 = mp.l2l(L_mid, c_tgt - c_mid)
+    phi2 = mp.l2p(L2, tgt, c_tgt)
+    err2 = np.linalg.norm(np.asarray(phi2) - ref) / np.linalg.norm(ref)
+    assert err2 < 4e-3, err2
+
+
+def test_p2p_reference():
+    src, q, tgt = _clusters(sep=1.0)
+    phi = mp.p2p(q, src, tgt)
+    ref = _direct(q, src, tgt)
+    np.testing.assert_allclose(np.asarray(phi), ref, rtol=2e-4)
+
+
+def test_p2p_self_interaction_zero():
+    src, q, _ = _clusters()
+    phi = mp.p2p(q, src, src)
+    assert np.all(np.isfinite(np.asarray(phi)))
+
+
+def test_convergence_with_order():
+    """Higher expansion order => lower error (sanity on operator family)."""
+    src, q, tgt = _clusters(sep=4.0)
+    errs = []
+    for p in (2, 3, 4):
+        ops = mp.MultipoleOperators(p)
+        c_src = jnp.asarray(np.mean(np.asarray(src), axis=0))
+        c_tgt = jnp.asarray(np.mean(np.asarray(tgt), axis=0))
+        M = ops.p2m(q, src, c_src)
+        L = ops.m2l(M, c_tgt - c_src)
+        phi = ops.l2p(L, tgt, c_tgt)
+        ref = _direct(q, src, tgt)
+        errs.append(np.linalg.norm(np.asarray(phi) - ref) / np.linalg.norm(ref))
+    assert errs[2] < errs[1] < errs[0]

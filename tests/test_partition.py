@@ -1,0 +1,65 @@
+"""Partitioning: balance, histogram splitters, and the paper's central
+demonstration — Hilbert discontinuity on boundary distributions vs ORB."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.distributions import make_distribution
+from repro.core.partition.hot import histogram_splitters, hot_partition
+from repro.core.partition.metrics import connected_components, load_balance, partition_report
+from repro.core.partition.orb import find_splitter, orb_partition
+
+
+def test_histogram_splitter_exact():
+    rng = np.random.default_rng(0)
+    vals = rng.uniform(-5, 3, 10_000)
+    s = find_splitter(vals, 0.25)
+    frac = (vals < s).mean()
+    assert abs(frac - 0.25) < 0.002
+
+
+@given(st.integers(2, 9), st.sampled_from(["cube", "sphere", "plummer"]))
+@settings(max_examples=12, deadline=None)
+def test_orb_balance_property(nparts, dist):
+    """ORB multisection balances any distribution, any (non-pow2) nparts."""
+    x = make_distribution(dist, 4000, seed=nparts)
+    part, boxes = orb_partition(x, nparts)
+    counts = np.bincount(part, minlength=nparts)
+    assert counts.min() >= (4000 // nparts) - max(2, int(0.02 * 4000 / nparts))
+    assert load_balance(part, nparts) < 1.05
+    # tight boxes really contain their points
+    for p in range(nparts):
+        pts = x[part == p]
+        assert np.all(pts >= boxes[p, 0] - 1e-12) and np.all(pts <= boxes[p, 1] + 1e-12)
+
+
+@pytest.mark.parametrize("curve", ["hilbert", "morton"])
+def test_hot_balance(curve):
+    x = make_distribution("sphere", 8000, seed=3)
+    part, _ = hot_partition(x, 16, curve=curve)
+    assert load_balance(part, 16) < 1.15
+
+
+def test_hilbert_weakness_on_boundary_distribution():
+    """Paper §2.2 / Fig 3: Hilbert interval partitions of a *sphere surface*
+    are spatially discontinuous; hybrid ORB partitions are compact."""
+    n, nparts = 8000, 16
+    x = make_distribution("sphere", n, seed=11)
+    part_h, _ = hot_partition(x, nparts, curve="hilbert")
+    part_o, _ = orb_partition(x, nparts)
+    rep_h = partition_report(x, part_h, nparts)
+    rep_o = partition_report(x, part_o, nparts)
+    # ORB: every partition is a single spatial component
+    assert rep_o["max_components"] == 1
+    # Hilbert: at least one partition splits into disconnected islands
+    assert rep_h["max_components"] > 1
+    assert rep_h["mean_components"] > rep_o["mean_components"]
+
+
+def test_hilbert_fine_on_uniform_cube():
+    """The counterpoint the paper concedes: HOT is optimal for dense uniform
+    volumes — partitions stay (mostly) connected."""
+    x = make_distribution("cube", 8000, seed=13)
+    part_h, _ = hot_partition(x, 8, curve="hilbert")
+    rep = partition_report(x, part_h, 8)
+    assert rep["mean_components"] <= 1.5

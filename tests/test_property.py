@@ -1,0 +1,86 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import protocols as proto
+from repro.core.distributions import make_distribution
+from repro.core.fmm import direct_potential, fmm_potential
+from repro.core.hsdx import adjacency_from_boxes, build_comm_tree, relay_routes
+from repro.core.partition.orb import orb_partition
+from repro.core.tree import build_tree
+
+
+@given(st.integers(0, 10_000), st.sampled_from(["cube", "sphere", "plummer"]),
+       st.integers(16, 64))
+@settings(max_examples=8, deadline=None)
+def test_fmm_accuracy_invariant(seed, dist, ncrit):
+    """FMM error stays bounded for any distribution/seed/leaf size."""
+    n = 800
+    x = make_distribution(dist, n, seed=seed)
+    q = np.random.default_rng(seed).uniform(-1, 1, n)
+    phi = fmm_potential(x, q, theta=0.5, ncrit=ncrit)
+    ref = direct_potential(x, q)
+    err = np.linalg.norm(phi - ref) / np.linalg.norm(ref)
+    assert err < 3e-3, (dist, seed, ncrit, err)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_tree_partition_of_unity(seed):
+    """Any tree: leaves partition the bodies exactly; levels are consistent."""
+    x = make_distribution("plummer", 700, seed=seed)
+    t = build_tree(x, np.ones(700), ncrit=32)
+    assert t.n_body[t.leaves].sum() == 700
+    for c in range(1, t.n_cells):
+        assert t.level[c] == t.level[t.parent[c]] + 1
+
+
+@given(st.integers(2, 12), st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_relay_routes_reach_everyone(nparts, seed):
+    """HSDX adjacency routes connect every ordered pair, and every hop is a
+    Lemma-1 neighbor (communication strictly between adjacent partitions)."""
+    x = make_distribution("sphere", 1200, seed=seed)
+    _, _, boxes = orb_partition(x, nparts, regions=True)
+    adj = adjacency_from_boxes(boxes)
+    routes = relay_routes(adj)
+    for (s, d), path in routes.items():
+        assert path[0] == s and path[-1] == d
+        for u, v in zip(path, path[1:]):
+            assert v in adj[u] or (u, v) == (s, d), (path, u, v)
+
+
+@given(st.integers(2, 10), st.data())
+@settings(max_examples=15, deadline=None)
+def test_any_bytes_matrix_delivered_by_all_protocols(P, data):
+    """Protocol invariant: arbitrary sparse byte matrices are delivered
+    identically by all four schedules."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    B = rng.integers(0, 3, (P, P)) * rng.integers(1, 10_000, (P, P))
+    np.fill_diagonal(B, 0)
+    boxes = np.array([[[i, 0, 0], [i + 1.0, 1, 1]] for i in range(P)])
+    expect = {(i, j): int(B[i, j]) for i in range(P) for j in range(P)
+              if i != j and B[i, j]}
+    for name in proto.PROTOCOLS:
+        sched = proto.make_schedule(name, B, boxes=boxes)
+        assert proto.simulate_delivery(sched) == expect, name
+
+
+@given(st.integers(1, 6), st.integers(0, 500))
+@settings(max_examples=10, deadline=None)
+def test_comm_tree_is_spanning(nparts_log, seed):
+    nparts = 2 * nparts_log + 1          # odd, non-pow2 too
+    x = make_distribution("cube", 900, seed=seed)
+    # region boxes share split planes (the Lemma-1 adjacency structure);
+    # tight boxes may be disjoint and are only used for the MAC/LET
+    _, _, boxes = orb_partition(x, nparts, regions=True)
+    adj = adjacency_from_boxes(boxes)
+    parent = build_comm_tree(adj, 0)
+    # every node reaches the root
+    for v in range(1, nparts):
+        u, hops = v, 0
+        while u != 0 and hops <= nparts:
+            u = int(parent[u])
+            hops += 1
+            assert u >= 0, f"node {v} disconnected"
+        assert u == 0

@@ -1,0 +1,51 @@
+"""Serving engine: continuous batching, slot reuse, decode == forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve.engine import Request, ServeEngine
+from repro.sharding.parallel import Parallelism
+
+
+def test_engine_serves_queue_through_slots():
+    cfg = get_config("smollm-360m", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = ServeEngine(model, params, B=2, S_max=64,
+                      par=Parallelism(remat=False))
+    rng = np.random.default_rng(1)
+    for rid in range(4):  # 4 requests through 2 slots
+        eng.submit(Request(rid=rid,
+                           prompt=list(rng.integers(1, cfg.vocab, 6)),
+                           max_new=4))
+    done = eng.run(max_steps=40)
+    assert len(done) == 4
+    for r in done:
+        assert len(r.out) >= 4
+        assert all(0 <= t for t in r.out)
+
+
+def test_greedy_decode_matches_forward_argmax():
+    """Engine's greedy continuation equals argmax over the growing sequence
+    computed with the plain forward pass (cache correctness end-to-end)."""
+    cfg = get_config("qwen3-0.6b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(3))
+    par = Parallelism(remat=False)
+    prompt = [3, 17, 91, 45]
+    eng = ServeEngine(model, params, B=1, S_max=32, par=par)
+    eng.submit(Request(rid=0, prompt=prompt, max_new=5))
+    out = eng.run(max_steps=10)[0].out
+
+    # reference: repeated full forward + argmax
+    from repro.models.transformer import logits_fn
+    seq = list(prompt)
+    want = []
+    for _ in range(5):
+        h, _ = model.forward(params, {"tokens": jnp.asarray([seq], jnp.int32)}, par)
+        tok = int(jnp.argmax(logits_fn(params, h[:, -1:], cfg, par)[0, -1]))
+        want.append(tok)
+        seq.append(tok)
+    assert out == want, (out, want)

@@ -1,0 +1,56 @@
+"""SFC key properties — including the Hilbert adjacency invariant, checked
+with hypothesis (consecutive Hilbert keys decode to grid-adjacent cells)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import sfc
+
+
+@given(st.integers(2, 6), st.data())
+@settings(max_examples=25, deadline=None)
+def test_morton_roundtrip(depth, data):
+    n = data.draw(st.integers(1, 64))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    g = rng.integers(0, 1 << depth, (n, 3)).astype(np.uint64)
+    k = sfc.morton_encode(g, depth)
+    np.testing.assert_array_equal(sfc.morton_decode(k, depth), g)
+
+
+@given(st.integers(2, 6), st.data())
+@settings(max_examples=25, deadline=None)
+def test_hilbert_roundtrip(depth, data):
+    n = data.draw(st.integers(1, 64))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    g = rng.integers(0, 1 << depth, (n, 3)).astype(np.uint64)
+    k = sfc.hilbert_encode(g, depth)
+    np.testing.assert_array_equal(sfc.hilbert_decode(k, depth), g)
+
+
+def test_hilbert_is_bijection_small():
+    depth = 3
+    total = 1 << (3 * depth)
+    keys = np.arange(total, dtype=np.uint64)
+    g = sfc.hilbert_decode(keys, depth)
+    back = sfc.hilbert_encode(g, depth)
+    np.testing.assert_array_equal(back, keys)
+
+
+def test_hilbert_adjacency_property():
+    """THE Hilbert property: consecutive keys are adjacent grid cells
+    (L1 distance exactly 1).  Morton does NOT satisfy this."""
+    depth = 4
+    total = 1 << (3 * depth)
+    keys = np.arange(total, dtype=np.uint64)
+    g = sfc.hilbert_decode(keys, depth).astype(np.int64)
+    step = np.abs(np.diff(g, axis=0)).sum(axis=1)
+    assert (step == 1).all()
+    gm = sfc.morton_decode(keys, depth).astype(np.int64)
+    stepm = np.abs(np.diff(gm, axis=0)).sum(axis=1)
+    assert (stepm > 1).any()
+
+
+def test_morton_key_order_matches_octants():
+    depth = 2
+    g = np.array([[0, 0, 0], [3, 3, 3], [0, 0, 1], [2, 0, 0]], dtype=np.uint64)
+    k = sfc.morton_encode(g, depth)
+    assert k[0] < k[2] < k[3] < k[1]
