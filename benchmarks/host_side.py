@@ -1,0 +1,96 @@
+"""Host-side geometry micro-benchmark: seed loop implementations vs the
+frontier-vectorized traversal/LET passes, plus plan build-once/execute-many.
+
+Workload (the ISSUE acceptance case): a 20k-body sphere-surface (boundary)
+distribution at 8 ORB partitions.  For every partition we run the local
+dual traversal and the sender-side LET extraction to the 7 remote boxes —
+once with the retained reference loops, once with the vectorized passes —
+and report the aggregate speedup.  A second pair of rows times building an
+`FMMPlan` vs re-executing it, showing the geometry work a reused plan skips.
+"""
+import os
+import time
+
+import numpy as np
+
+from repro.core.distributions import make_distribution
+from repro.core.fmm import execute_fmm_plan, upward_pass
+from repro.core.let import extract_lets
+from repro.core.multipole import get_operators
+from repro.core.partition.orb import orb_partition
+from repro.core.plan import build_fmm_plan
+from repro.core.reference import (reference_dual_traversal,
+                                  reference_extract_let)
+from repro.core.traversal import dual_traversal
+from repro.core.tree import build_tree
+
+
+def _time(fn):
+    t0 = time.perf_counter()
+    fn()
+    return (time.perf_counter() - t0) * 1e6
+
+
+def run(n: int | None = None, nparts: int = 8, theta: float = 0.5,
+        ncrit: int = 64):
+    n = n or int(os.environ.get("HOST_SIDE_N", 20000))
+    x = make_distribution("sphere", n, seed=0)      # boundary distribution
+    q = np.random.default_rng(1).uniform(-1, 1, n)
+    part, boxes = orb_partition(x, nparts)
+    ops = get_operators(4)
+    trees, Ms = [], []
+    for pid in range(nparts):
+        idx = np.nonzero(part == pid)[0]
+        t = build_tree(x[idx], q[idx], ncrit=ncrit)
+        trees.append(t)
+        Ms.append(np.asarray(upward_pass(t, ops)))
+
+    def trav_vec():
+        for t in trees:
+            dual_traversal(t, t, theta)
+
+    def trav_ref():
+        for t in trees:
+            reference_dual_traversal(t, t, theta)
+
+    def let_vec():
+        for i, t in enumerate(trees):
+            others = np.array([j for j in range(nparts) if j != i])
+            extract_lets(t, Ms[i], boxes[others, 0], boxes[others, 1], theta)
+
+    def let_ref():
+        for i, t in enumerate(trees):
+            for j in range(nparts):
+                if j != i:
+                    reference_extract_let(t, Ms[i], boxes[j, 0], boxes[j, 1], theta)
+
+    trav_vec()          # warm caches before timing
+    us_tv = _time(trav_vec)
+    us_tr = _time(trav_ref)
+    us_lv = _time(let_vec)
+    us_lr = _time(let_ref)
+
+    t0 = trees[0]
+    us_build = _time(lambda: build_fmm_plan(t0, t0, theta=theta, p=4))
+    plan = build_fmm_plan(t0, t0, theta=theta, p=4)
+    execute_fmm_plan(plan)          # warm the JIT cache
+    us_exec = _time(lambda: execute_fmm_plan(plan))
+
+    speedup = (us_tr + us_lr) / max(us_tv + us_lv, 1e-9)
+    return [
+        (f"host_traversal_ref_n{n}_p{nparts}", us_tr, ""),
+        (f"host_traversal_vec_n{n}_p{nparts}", us_tv,
+         f"speedup={us_tr / max(us_tv, 1e-9):.1f}x"),
+        (f"host_let_ref_n{n}_p{nparts}", us_lr, ""),
+        (f"host_let_vec_n{n}_p{nparts}", us_lv,
+         f"speedup={us_lr / max(us_lv, 1e-9):.1f}x"),
+        (f"host_geometry_total_n{n}_p{nparts}", us_tv + us_lv,
+         f"speedup={speedup:.1f}x"),
+        (f"fmm_plan_build_n{n}", us_build, "traversal+padding+schedules"),
+        (f"fmm_plan_execute_n{n}", us_exec, "kernels+gathers only"),
+    ]
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -3,10 +3,11 @@ import sys
 import traceback
 
 from benchmarks import (fig6_granularity, fig7_protocols, fig8_weak,
-                        kernel_bench, partition_quality, roofline_table,
-                        table3_hsdx)
+                        host_side, kernel_bench, partition_quality,
+                        roofline_table, table3_hsdx)
 
 MODULES = [
+    ("host_side (plan vs loop geometry)", host_side),
     ("partition_quality (Fig 3 / §2.2)", partition_quality),
     ("fig6_granularity (Fig 6)", fig6_granularity),
     ("table3_hsdx (Table 3)", table3_hsdx),

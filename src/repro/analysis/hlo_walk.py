@@ -232,12 +232,20 @@ def weighted_analysis(txt: str, pod_size: int = 256) -> dict:
                 res_elems = 1
                 for d in res_shapes[0][1]:
                     res_elems *= d
-                # contracted size from lhs operand shape + contracting dims
-                ops = [o.strip().lstrip("%") for o in dm.group(1).split(",")[:2]]
+                # contracted size from lhs operand shape + contracting dims.
+                # Some XLA versions print typed operands inline
+                # (dot(f32[128,512] %a, ...)); others print bare names — try
+                # the inline shapes first, then the name -> shape map.
                 cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+                arg_shapes = _shape_list(dm.group(1))
+                lshape = arg_shapes[0][1] if arg_shapes else None
+                if lshape is None:
+                    ops = [o.strip().lstrip("%")
+                           for o in dm.group(1).split(",")[:2]]
+                    if ops and ops[0] in shapes and shapes[ops[0]]:
+                        lshape = shapes[ops[0]][0][1]
                 csize = 1
-                if cdims and ops and ops[0] in shapes and shapes[ops[0]]:
-                    lshape = shapes[ops[0]][0][1]
+                if cdims and lshape is not None:
                     for d in cdims.group(1).split(","):
                         if d and int(d) < len(lshape):
                             csize *= lshape[int(d)]

@@ -4,6 +4,8 @@
     tree.py            adaptive octree with tight (squeezed) cell boxes
     traversal.py       dual-tree MAC traversal (+ LET M2P fallback)
     fmm.py             bucketed, jitted evaluator; O(N^2) oracle
+    plan.py            plan/execute split: frozen InteractionPlan / FMMPlan
+    reference.py       retained per-element loop baselines (golden-pinned)
     distributions.py   cube / sphere / ellipsoid / plummer workloads
     partition/         Morton + Skilling-Hilbert SFC, HOT histogram splits,
                        hybrid ORB multisection, quality metrics

@@ -34,6 +34,12 @@ def _axis_index(axis_name):
     return jax.lax.axis_index(axis_name)
 
 
+def _axis_size(axis_name):
+    if hasattr(jax.lax, "axis_size"):      # jax >= 0.6
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)      # older jax
+
+
 def _pvary(x, axis_name):
     """Mark a freshly-created array as varying over the manual axis (JAX's
     VMA check requires scan carries to match the body output's vma set)."""
@@ -49,7 +55,7 @@ def ring_all_gather(x, axis_name: str, *, reverse: bool = False):
     x: (d, ...) local shard -> (N*d, ...) in rank order.  Expressed as a scan
     so XLA can overlap each hop with the consumer's compute when fused.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     if n == 1:
         return x
     perm = [((i + 1) % n, i) for i in range(n)] if not reverse else \
@@ -71,7 +77,7 @@ def ring_all_gather(x, axis_name: str, *, reverse: bool = False):
 
 def ring_reduce_scatter(x, axis_name: str):
     """Reduce-scatter via N-1 neighbor ppermutes. x: (N*d, ...) -> (d, ...)."""
-    n = jax.lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     if n == 1:
         return x
     d = x.shape[0] // n
@@ -99,7 +105,7 @@ def hierarchical_all_reduce(x, inner_axis: str, outer_axis: str | None):
     if outer_axis is None:
         return jax.lax.psum(x, inner_axis)
     flat = jnp.reshape(x, (-1,))
-    n = jax.lax.axis_size(inner_axis)
+    n = _axis_size(inner_axis)
     pad = (-flat.shape[0]) % n
     flat = jnp.pad(flat, (0, pad))
     part = jax.lax.psum_scatter(jnp.reshape(flat, (n, -1)), inner_axis,
@@ -121,8 +127,8 @@ def two_stage_all_to_all(x, inner_axis: str, outer_axis: str,
     x leading dim must equal n_inner * n_outer (destination-major order:
     index = outer * n_inner + inner).
     """
-    n_in = jax.lax.axis_size(inner_axis)
-    n_out = jax.lax.axis_size(outer_axis)
+    n_in = _axis_size(inner_axis)
+    n_out = _axis_size(outer_axis)
     lead = x.shape[split_axis]
     assert lead % (n_in * n_out) == 0, (lead, n_in, n_out)
     # reshape leading dim -> (n_out, n_in, rest)
@@ -148,7 +154,7 @@ def all_gather_matmul_overlapped(x, w, axis_name: str):
     x: (m, k) local shard of the gathered dim; w: (k, n) replicated (or
     column-sharded outside).  Returns (N*m, n) rows in rank order.
     """
-    n_dev = jax.lax.axis_size(axis_name)
+    n_dev = _axis_size(axis_name)
     me = _axis_index(axis_name)
     perm = [((i + 1) % n_dev, i) for i in range(n_dev)]
     m = x.shape[0]
@@ -172,7 +178,7 @@ def all_gather_matmul_overlapped(x, w, axis_name: str):
 
 def neighbor_exchange(x, axis_name: str, shift: int = 1):
     """One HSDX hop: send to the +shift ring neighbor (direct link only)."""
-    n = jax.lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     perm = [(i, (i + shift) % n) for i in range(n)]
     return jax.lax.ppermute(x, axis_name, perm)
 

@@ -5,6 +5,15 @@ This is the host-level (NumPy index plumbing + JAX arithmetic) executor used
 for correctness and for the paper's communication accounting.  The device-
 level collective expression of the same schedules lives in collectives.py and
 launch/dryrun.py.
+
+The pipeline follows the plan/execute split (repro.core.plan):
+`build_distributed_plan` does all host-side geometry once — partitioning,
+local trees, sender-side batched LET extraction (`extract_lets`, all P−1
+boxes per sender in one pass), protocol scheduling, and the per-receiver
+interaction plans against every grafted subtree.  `execute_distributed_plan`
+then runs kernels + gathers only, so the same `DistributedPlan` can be
+evaluated repeatedly (time-stepping, protocol sweeps) with zero traversal,
+list construction or padding work.
 """
 from __future__ import annotations
 
@@ -15,16 +24,23 @@ import numpy as np
 
 from repro.core import protocols as proto
 from repro.core.fmm import (direct_potential, downward_pass, l2p_pass,
-                            m2l_pass, m2p_pass, p2p_pass, upward_pass)
+                            m2l_apply, m2p_apply, p2p_apply, upward_pass)
 from repro.core.hsdx import adjacency_from_boxes, graph_diameter
-from repro.core.let import LETData, extract_let, graft
+from repro.core.let import LETData, extract_lets, graft
 from repro.core.multipole import get_operators
 from repro.core.partition.hot import hot_partition
 from repro.core.partition.orb import orb_partition
-from repro.core.traversal import dual_traversal
+from repro.core.plan import (InteractionPlan, TreeSchedules,
+                             build_interaction_plan, build_tree_schedules)
 from repro.core.tree import build_tree
 
-__all__ = ["DistributedFMM", "run_distributed_fmm"]
+__all__ = ["DistributedFMM", "DistributedPlan", "build_distributed_plan",
+           "execute_distributed_plan", "run_distributed_fmm"]
+
+# default eps-inflation of SFC partitions' tight boxes when deriving the
+# adjacency graph (fraction of the global span); ORB regions share split
+# planes exactly and need no inflation
+DEFAULT_SFC_BOX_INFLATION = 0.03
 
 
 @dataclass
@@ -39,7 +55,41 @@ class DistributedFMM:
     diameter: int
 
 
-def _partition(x, nparts, method):
+@dataclass
+class _ReceiverPlan:
+    """One partition's frozen receiver-side geometry."""
+    tree: object
+    sched: TreeSchedules
+    local: InteractionPlan                       # own tree vs own tree
+    remote: list                                 # [(sender, graft, InteractionPlan)]
+
+
+@dataclass
+class DistributedPlan:
+    """Everything `execute_distributed_plan` needs — built once, run many."""
+    n: int
+    nparts: int
+    theta: float
+    p: int
+    part: np.ndarray
+    owners: list
+    boxes: np.ndarray
+    adj_boxes: np.ndarray
+    trees: list
+    Ms: list                                     # per-partition multipoles (np)
+    lets: dict                                   # (i, j) -> LETData
+    receivers: list                              # _ReceiverPlan per partition
+    bytes_matrix: np.ndarray
+    schedule_stats: dict
+    loggp_time: float
+    n_stages: int
+    adjacency_degree: float
+    diameter: int
+    partition_stats: dict = field(default_factory=dict)
+
+
+def _partition(x, nparts, method,
+               sfc_box_inflation: float = DEFAULT_SFC_BOX_INFLATION):
     """Returns (part, tight_boxes, adjacency_boxes).  ORB regions share split
     planes exactly; SFC partitions fall back to eps-inflated tight boxes."""
     if method == "orb":
@@ -54,44 +104,50 @@ def _partition(x, nparts, method):
                 boxes[p, 0], boxes[p, 1] = pts.min(axis=0), pts.max(axis=0)
         span = (x.max(axis=0) - x.min(axis=0)).max()
         infl = boxes.copy()
-        infl[:, 0] -= 0.03 * span
-        infl[:, 1] += 0.03 * span
+        infl[:, 0] -= sfc_box_inflation * span
+        infl[:, 1] += sfc_box_inflation * span
         return part, boxes, infl
     raise ValueError(method)
 
 
-def run_distributed_fmm(x, q, nparts: int = 8, method: str = "orb",
-                        protocol: str = "hsdx", theta: float = 0.5,
-                        ncrit: int = 64, p: int = 4,
-                        grain_bytes: int | None = None,
-                        check_delivery: bool = True) -> DistributedFMM:
+def build_distributed_plan(x, q, nparts: int = 8, method: str = "orb",
+                           protocol: str = "hsdx", theta: float = 0.5,
+                           ncrit: int = 64, p: int = 4,
+                           grain_bytes: int | None = None,
+                           check_delivery: bool = True,
+                           sfc_box_inflation: float = DEFAULT_SFC_BOX_INFLATION,
+                           ) -> DistributedPlan:
+    """All host-side geometry + communication metadata, precomputed once."""
     x = np.asarray(x, dtype=np.float64)
     q = np.asarray(q, dtype=np.float64)
     n = len(x)
-    part, boxes, adj_boxes = _partition(x, nparts, method)
+    part, boxes, adj_boxes = _partition(x, nparts, method,
+                                        sfc_box_inflation=sfc_box_inflation)
     ops = get_operators(p)
 
     # --- completely local trees (local bounding box, tight cells; §3) ------
-    trees, Ms, owners = [], [], []
+    trees, Ms, owners, scheds = [], [], [], []
     for pid in range(nparts):
         idx = np.nonzero(part == pid)[0]
         owners.append(idx)
         t = build_tree(x[idx], q[idx], ncrit=ncrit)
         trees.append(t)
-        Ms.append(np.asarray(upward_pass(t, ops)))
+        scheds.append(build_tree_schedules(t))
+        Ms.append(np.asarray(upward_pass(t, ops, sched=scheds[-1])))
 
-    # --- sender-initiated LET extraction (one per ordered pair) ------------
+    # --- sender-initiated LET extraction: all P-1 boxes per sender in one
+    #     batched frontier pass -------------------------------------------
     lets: dict[tuple[int, int], LETData] = {}
     B = np.zeros((nparts, nparts), dtype=np.int64)
     for i in range(nparts):
-        for j in range(nparts):
-            if i == j:
-                continue
-            let = extract_let(trees[i], Ms[i], boxes[j, 0], boxes[j, 1], theta)
-            lets[(i, j)] = let
+        others = np.array([j for j in range(nparts) if j != i], dtype=np.int64)
+        for j, let in zip(others, extract_lets(trees[i], Ms[i],
+                                               boxes[others, 0],
+                                               boxes[others, 1], theta)):
+            lets[(i, int(j))] = let
             B[i, j] = let.nbytes
 
-    # --- protocol schedule + delivery check ---------------------------------
+    # --- protocol schedule + delivery check --------------------------------
     sched = proto.make_schedule(protocol, B, boxes=adj_boxes)
     if check_delivery:
         delivered = proto.simulate_delivery(sched)
@@ -101,33 +157,71 @@ def run_distributed_fmm(x, q, nparts: int = 8, method: str = "orb",
     stats = proto.schedule_stats(sched)
     t_model = proto.loggp_time(sched, grain_bytes=grain_bytes)
 
-    # --- receiver side: graft + traverse + evaluate -------------------------
-    phi = np.zeros(n)
+    # --- receiver side: graft + traverse ONCE into frozen plans ------------
+    receivers = []
     for j in range(nparts):
         t = trees[j]
-        m2l_pairs, p2p_pairs = dual_traversal(t, t, theta)
-        L = m2l_pass(ops, jnp.asarray(Ms[j]), t, t, m2l_pairs)
-        phi_local = p2p_pass(t, t, p2p_pairs)
+        local = build_interaction_plan(t, t, theta)
+        remote = []
         for i in range(nparts):
             if i == j:
                 continue
             g = graft(lets[(i, j)])
-            m2l_r, p2p_r, m2p_r = dual_traversal(t, g, theta, with_m2p=True)
-            if len(m2l_r):
-                L = L + m2l_pass(ops, jnp.asarray(g.M, dtype=L.dtype), t, g, m2l_r)
-            if len(p2p_r):
-                phi_local += p2p_pass(t, g, p2p_r)
-            if len(m2p_r):
-                phi_local += m2p_pass(t, g.M, g.center, m2p_r, p=p)
-        L = downward_pass(t, ops, L)
-        phi_local += l2p_pass(t, ops, L)
-        phi[owners[j][t.perm]] = phi_local
+            remote.append((i, g, build_interaction_plan(t, g, theta,
+                                                        with_m2p=True)))
+        receivers.append(_ReceiverPlan(tree=t, sched=scheds[j], local=local,
+                                       remote=remote))
 
     adj = adjacency_from_boxes(adj_boxes)
     deg = float(np.max([len(a) for a in adj]))
-    return DistributedFMM(
-        phi=phi, bytes_matrix=B, schedule_stats=stats, loggp_time=t_model,
-        partition_stats=dict(nparts=nparts, method=method),
-        n_stages=sched.n_stages, adjacency_degree=deg,
+    return DistributedPlan(
+        n=n, nparts=nparts, theta=theta, p=p, part=part, owners=owners,
+        boxes=boxes, adj_boxes=adj_boxes, trees=trees, Ms=Ms, lets=lets,
+        receivers=receivers, bytes_matrix=B, schedule_stats=stats,
+        loggp_time=t_model, n_stages=sched.n_stages, adjacency_degree=deg,
         diameter=graph_diameter(adj),
+        partition_stats=dict(nparts=nparts, method=method),
+    )
+
+
+def execute_distributed_plan(plan: DistributedPlan,
+                             use_pallas: bool = False) -> np.ndarray:
+    """Kernels + gathers only: no traversal, no list building, no padding."""
+    ops = get_operators(plan.p)
+    phi = np.zeros(plan.n)
+    for j in range(plan.nparts):
+        r = plan.receivers[j]
+        t = r.tree
+        L = m2l_apply(ops, jnp.asarray(plan.Ms[j]), r.local)
+        phi_local = p2p_apply(t, t, r.local, use_pallas=use_pallas)
+        for i, g, inter in r.remote:
+            if inter.n_m2l:
+                L = L + m2l_apply(ops, jnp.asarray(g.M, dtype=L.dtype), inter)
+            if inter.n_p2p:
+                phi_local += p2p_apply(t, g, inter, use_pallas=use_pallas)
+            if inter.n_m2p:
+                phi_local += m2p_apply(t, g.M, inter, p=plan.p)
+        L = downward_pass(t, ops, L, sched=r.sched)
+        phi_local += l2p_pass(t, ops, L, sched=r.sched)
+        phi[plan.owners[j][t.perm]] = phi_local
+    return phi
+
+
+def run_distributed_fmm(x, q, nparts: int = 8, method: str = "orb",
+                        protocol: str = "hsdx", theta: float = 0.5,
+                        ncrit: int = 64, p: int = 4,
+                        grain_bytes: int | None = None,
+                        check_delivery: bool = True,
+                        sfc_box_inflation: float = DEFAULT_SFC_BOX_INFLATION,
+                        ) -> DistributedFMM:
+    plan = build_distributed_plan(
+        x, q, nparts=nparts, method=method, protocol=protocol, theta=theta,
+        ncrit=ncrit, p=p, grain_bytes=grain_bytes,
+        check_delivery=check_delivery, sfc_box_inflation=sfc_box_inflation)
+    phi = execute_distributed_plan(plan)
+    return DistributedFMM(
+        phi=phi, bytes_matrix=plan.bytes_matrix,
+        schedule_stats=plan.schedule_stats, loggp_time=plan.loggp_time,
+        partition_stats=plan.partition_stats, n_stages=plan.n_stages,
+        adjacency_degree=plan.adjacency_degree, diameter=plan.diameter,
     )

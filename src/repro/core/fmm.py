@@ -1,26 +1,36 @@
-"""Single-partition FMM evaluator: host-built tree/lists + JAX arithmetic.
+"""Single-partition FMM evaluator: host-built plans + JAX arithmetic.
 
-The numeric passes (P2M, M2M, M2L, L2L, L2P, P2P) run as *jitted, bucketed*
-vmaps over padded index lists: all list lengths are padded to power-of-two
-buckets so the JIT cache is shared across trees, partitions and LET pairs
-(tree shapes vary; the compiled kernels must not).  The P2P hot spot can
-route through the Pallas kernel (repro.kernels) — the jnp path is the CPU
-reference.
+The numeric passes (P2M, M2M, M2L, L2L, L2P, P2P, M2P) run as *jitted,
+bucketed* vmaps over the padded index tables of an `FMMPlan`
+(repro.core.plan): all list lengths and gather widths are padded to
+power-of-two buckets so the JIT cache is shared across trees, partitions and
+LET pairs (tree shapes vary; the compiled kernels must not).
+
+Plan construction (traversal, padding, bucketing — pure NumPy geometry) lives
+in plan.py; this module only *executes* plans: `execute_fmm_plan` does zero
+list construction and zero padding work, so a plan built once can be
+evaluated many times (time-stepping, protocol sweeps) at kernel cost only.
+The P2P hot spot can route through the Pallas kernel (repro.kernels) — the
+jnp path is the CPU reference.
 """
 from __future__ import annotations
 
 from functools import partial
+from types import SimpleNamespace
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.multipole import MultipoleOperators, get_operators
-from repro.core.traversal import dual_traversal
+from repro.core.plan import (FMMPlan, InteractionPlan, TreeSchedules,
+                             build_fmm_plan, build_interaction_plan,
+                             build_tree_schedules)
 from repro.core.tree import Tree, build_tree
 
-__all__ = ["fmm_potential", "evaluate", "direct_potential", "upward_pass",
-           "downward_pass", "m2l_pass", "p2p_pass", "m2p_pass", "l2p_pass"]
+__all__ = ["fmm_potential", "evaluate", "execute_fmm_plan", "direct_potential",
+           "upward_pass", "downward_pass", "m2l_pass", "m2l_apply", "p2p_pass",
+           "p2p_apply", "m2p_pass", "m2p_apply", "l2p_pass"]
 
 
 def direct_potential(x, q, x_tgt=None, chunk: int = 2048) -> np.ndarray:
@@ -34,49 +44,6 @@ def direct_potential(x, q, x_tgt=None, chunk: int = 2048) -> np.ndarray:
         r2 = (d ** 2).sum(-1)
         inv = np.where(r2 > 0, 1.0 / np.sqrt(np.maximum(r2, 1e-300)), 0.0)
         out[s:s + chunk] = inv @ q
-    return out
-
-
-# --------------------------------------------------------- bucketing -------
-def _bucket(n: int, lo: int = 16) -> int:
-    b = lo
-    while b < n:
-        b *= 2
-    return b
-
-
-def _pad_pairs(pairs: np.ndarray):
-    """Pad pair lists to power-of-2 buckets so the vmapped kernels hit the
-    JIT cache across trees/partitions."""
-    n = len(pairs)
-    m = _bucket(max(n, 1))
-    # pad by replicating the first pair: keeps indices valid (root cells can
-    # be huge) and keeps m2l displacements nonzero; masks zero the values
-    out = np.tile(pairs[0], (m, 1)).astype(np.int64) if n else np.zeros((m, 2), np.int64)
-    out[:n] = pairs
-    mask = np.zeros(m, dtype=np.float32)
-    mask[:n] = 1.0
-    return out, mask
-
-
-def _pad_ids(ids: np.ndarray, pad_value: int | None = None):
-    n = len(ids)
-    m = _bucket(max(n, 1))
-    fill = (ids[0] if (pad_value is None and n) else (pad_value or 0))
-    out = np.full(m, fill, dtype=np.int64)
-    out[:n] = ids
-    mask = np.zeros(m, dtype=np.float32)
-    mask[:n] = 1.0
-    return out, mask
-
-
-def _pad_bodies(tree, cells: np.ndarray, width: int | None = None):
-    """(len(cells), width) body index (into sorted arrays), -1 padded."""
-    width = width or max(int(tree.ncrit), 1)
-    out = -np.ones((len(cells), width), dtype=np.int64)
-    for i, c in enumerate(cells):
-        s, n = tree.body_start[c], tree.n_body[c]
-        out[i, :n] = np.arange(s, s + n)
     return out
 
 
@@ -124,123 +91,161 @@ def _p2p_vals(xt, xs, qs, mask):
 
 
 # ------------------------------------------------------------- passes ------
-def upward_pass(tree: Tree, ops: MultipoleOperators) -> jnp.ndarray:
+def upward_pass(tree: Tree, ops: MultipoleOperators,
+                sched: TreeSchedules | None = None) -> jnp.ndarray:
     """P2M at leaves, then M2M level-by-level (deepest first). -> (C, nk)."""
+    if sched is None:
+        sched = build_tree_schedules(tree)
     x = jnp.asarray(tree.x, jnp.float32)
     q = jnp.asarray(tree.q, jnp.float32)
-    leaves, lmask = _pad_ids(tree.leaves)
-    pad = _pad_bodies(tree, leaves)
-    safe = np.where(pad < 0, 0, pad)
-    xi = x[jnp.asarray(safe)]
-    qi = jnp.where(jnp.asarray(pad >= 0), q[jnp.asarray(safe)], 0.0)
-    centers = jnp.asarray(tree.center[leaves], jnp.float32)
-    M = _p2m_scatter(ops, qi, xi, centers, jnp.asarray(leaves),
-                     jnp.asarray(lmask), n_cells=tree.n_cells)
-
-    for ids in tree.levels_desc():
-        ids = ids[ids != 0]
-        if len(ids) == 0:
-            continue
-        ids_p, mask = _pad_ids(ids)
-        pa = tree.parent[ids_p]
-        d = jnp.asarray((tree.center[ids_p] - tree.center[pa]).astype(np.float32))
-        M = _m2m_scatter(ops, M, M[jnp.asarray(ids_p)], d, jnp.asarray(pa),
-                         jnp.asarray(mask))
+    xi = x[jnp.asarray(sched.leaf_idx)]
+    qi = jnp.where(jnp.asarray(sched.leaf_valid), q[jnp.asarray(sched.leaf_idx)], 0.0)
+    M = _p2m_scatter(ops, qi, xi, jnp.asarray(sched.leaf_centers),
+                     jnp.asarray(sched.leaves), jnp.asarray(sched.leaf_mask),
+                     n_cells=sched.n_cells)
+    for ls in reversed(sched.levels):
+        M = _m2m_scatter(ops, M, M[jnp.asarray(ls.ids)], jnp.asarray(ls.d),
+                         jnp.asarray(ls.parents), jnp.asarray(ls.mask))
     return M
 
 
-def m2l_pass(ops, M, tgt_tree, src_tree, pairs) -> jnp.ndarray:
-    M = jnp.asarray(M, jnp.float32)
-    if len(pairs) == 0:
-        return jnp.zeros((tgt_tree.n_cells, ops.nk), jnp.float32)
-    pairs, mask = _pad_pairs(pairs)
-    a, b = pairs[:, 0], pairs[:, 1]
-    d = jnp.asarray((tgt_tree.center[a] - src_tree.center[b]).astype(np.float32))
-    return _m2l_scatter(ops, M[jnp.asarray(b)], d, jnp.asarray(a),
-                        jnp.asarray(mask), n_cells=tgt_tree.n_cells)
-
-
-def downward_pass(tree: Tree, ops, L) -> jnp.ndarray:
-    max_lvl = int(tree.level.max())
-    for lvl in range(1, max_lvl + 1):
-        ids = np.nonzero(tree.level == lvl)[0]
-        if len(ids) == 0:
-            continue
-        ids_p, mask = _pad_ids(ids)
-        pa = tree.parent[ids_p]
-        d = jnp.asarray((tree.center[ids_p] - tree.center[pa]).astype(np.float32))
-        L = _l2l_scatter(ops, L, L[jnp.asarray(pa)], d, jnp.asarray(ids_p),
-                         jnp.asarray(mask))
+def downward_pass(tree: Tree, ops, L,
+                  sched: TreeSchedules | None = None) -> jnp.ndarray:
+    if sched is None:
+        sched = build_tree_schedules(tree)
+    for ls in sched.levels:
+        L = _l2l_scatter(ops, L, L[jnp.asarray(ls.parents)], jnp.asarray(ls.d),
+                         jnp.asarray(ls.ids), jnp.asarray(ls.mask))
     return L
 
 
-def l2p_pass(tree: Tree, ops, L) -> np.ndarray:
-    leaves, lmask = _pad_ids(tree.leaves)
-    pad = _pad_bodies(tree, leaves)
-    safe = np.where(pad < 0, 0, pad)
-    y = jnp.asarray(tree.x, jnp.float32)[jnp.asarray(safe)]
-    centers = jnp.asarray(tree.center[leaves], jnp.float32)
-    vals = _l2p_vals(ops, L[jnp.asarray(leaves)], y, centers, jnp.asarray(lmask))
+def l2p_pass(tree: Tree, ops, L, sched: TreeSchedules | None = None) -> np.ndarray:
+    if sched is None:
+        sched = build_tree_schedules(tree)
+    y = jnp.asarray(tree.x, jnp.float32)[jnp.asarray(sched.leaf_idx)]
+    vals = _l2p_vals(ops, L[jnp.asarray(sched.leaves)], y,
+                     jnp.asarray(sched.leaf_centers), jnp.asarray(sched.leaf_mask))
     phi = np.zeros(len(tree.x))
-    np.add.at(phi, safe.ravel(),
-              np.where(pad.ravel() < 0, 0.0, np.asarray(vals, np.float64).ravel()))
+    np.add.at(phi, sched.leaf_idx.ravel(),
+              np.where(sched.leaf_valid.ravel(),
+                       np.asarray(vals, np.float64).ravel(), 0.0))
+    return phi
+
+
+def m2l_apply(ops, M, plan: InteractionPlan) -> jnp.ndarray:
+    """Execute the plan's padded M2L list against multipoles M."""
+    M = jnp.asarray(M, jnp.float32)
+    if plan.n_m2l == 0:
+        return jnp.zeros((plan.n_tgt_cells, ops.nk), jnp.float32)
+    return _m2l_scatter(ops, M[jnp.asarray(plan.m2l_b)], jnp.asarray(plan.m2l_d),
+                        jnp.asarray(plan.m2l_a), jnp.asarray(plan.m2l_mask),
+                        n_cells=plan.n_tgt_cells)
+
+
+def m2l_pass(ops, M, tgt_tree, src_tree, pairs) -> jnp.ndarray:
+    plan = build_interaction_subset(tgt_tree, src_tree, m2l_pairs=pairs)
+    return m2l_apply(ops, M, plan)
+
+
+def build_interaction_subset(tgt_tree, src_tree, m2l_pairs=None,
+                             p2p_pairs=None, m2p_pairs=None) -> InteractionPlan:
+    """Plan just the supplied pair lists (compat shim for the pair-based API)."""
+    empty = np.zeros((0, 2), dtype=np.int64)
+    return build_interaction_plan(
+        tgt_tree, src_tree,
+        m2l_pairs=(empty if m2l_pairs is None else m2l_pairs),
+        p2p_pairs=(empty if p2p_pairs is None else p2p_pairs),
+        m2p_pairs=m2p_pairs)
+
+
+def p2p_apply(tgt_tree, src_tree, plan: InteractionPlan,
+              use_pallas: bool = False) -> np.ndarray:
+    """Execute the plan's bucketed P2P blocks.  Each block's source width is
+    sized to its own leaves, so a grafted LET's one big boundary leaf no
+    longer inflates every pair's padding."""
+    phi = np.zeros(plan.n_tgt_bodies)
+    if plan.n_p2p == 0:
+        return phi
+    xt_all = jnp.asarray(tgt_tree.x, jnp.float32)
+    xs_all = jnp.asarray(src_tree.x, jnp.float32)
+    qs_all = jnp.asarray(src_tree.q, jnp.float32)
+    for blk in plan.p2p_blocks:
+        xt = xt_all[jnp.asarray(blk.t_idx)]
+        xs = xs_all[jnp.asarray(blk.s_idx)]
+        qs = jnp.where(jnp.asarray(blk.s_valid), qs_all[jnp.asarray(blk.s_idx)], 0.0)
+        if use_pallas:
+            from repro.kernels.ops import p2p_blocked
+            vals = np.asarray(p2p_blocked(qs, xs, xt)) * blk.mask[:, None]
+        else:
+            vals = np.asarray(_p2p_vals(xt, xs, qs, jnp.asarray(blk.mask)))
+        np.add.at(phi, blk.t_idx.ravel(),
+                  np.where(blk.t_valid.ravel(),
+                           vals.astype(np.float64).ravel(), 0.0))
     return phi
 
 
 def p2p_pass(tgt_tree: Tree, src_tree, pairs, use_pallas: bool = False) -> np.ndarray:
-    phi = np.zeros(len(tgt_tree.x))
-    if len(pairs) == 0:
+    plan = build_interaction_subset(tgt_tree, src_tree, p2p_pairs=pairs)
+    return p2p_apply(tgt_tree, src_tree, plan, use_pallas=use_pallas)
+
+
+def m2p_apply(tgt_tree, src_M, plan: InteractionPlan, p: int = 4) -> np.ndarray:
+    """Execute the plan's padded M2P fallback list (truncated remote cells
+    that fail the MAC against a large local leaf)."""
+    ops = get_operators(p)
+    phi = np.zeros(plan.n_tgt_bodies)
+    if plan.n_m2p == 0:
         return phi
-    pairs, mask = _pad_pairs(pairs)
-    tp = _pad_bodies(tgt_tree, pairs[:, 0])
-    sp = _pad_bodies(src_tree, pairs[:, 1], width=max(int(src_tree.ncrit), 1))
-    safe_t = np.where(tp < 0, 0, tp)
-    safe_s = np.where(sp < 0, 0, sp)
-    xt = jnp.asarray(tgt_tree.x, jnp.float32)[jnp.asarray(safe_t)]
-    xs = jnp.asarray(src_tree.x, jnp.float32)[jnp.asarray(safe_s)]
-    qs = jnp.where(jnp.asarray(sp >= 0),
-                   jnp.asarray(src_tree.q, jnp.float32)[jnp.asarray(safe_s)], 0.0)
-    if use_pallas:
-        from repro.kernels.ops import p2p_blocked
-        vals = np.asarray(p2p_blocked(qs, xs, xt)) * mask[:, None]
-    else:
-        vals = np.asarray(_p2p_vals(xt, xs, qs, jnp.asarray(mask)))
-    np.add.at(phi, safe_t.ravel(),
-              np.where(tp.ravel() < 0, 0.0, vals.astype(np.float64).ravel()))
+    y = jnp.asarray(tgt_tree.x, jnp.float32)[jnp.asarray(plan.m2p_t_idx)]
+    M = jnp.asarray(src_M, jnp.float32)[jnp.asarray(plan.m2p_b)]
+    vals = np.asarray(_m2p_vals(ops, M, y, jnp.asarray(plan.m2p_centers),
+                                jnp.asarray(plan.m2p_mask)))
+    np.add.at(phi, plan.m2p_t_idx.ravel(),
+              np.where(plan.m2p_t_valid.ravel(),
+                       vals.astype(np.float64).ravel(), 0.0))
     return phi
 
 
 def m2p_pass(tgt_tree: Tree, src_M, src_centers, pairs, p: int = 4) -> np.ndarray:
-    """Direct multipole evaluation at leaf bodies (LET fallback for truncated
-    remote cells that fail the MAC against a large local leaf)."""
-    ops = get_operators(p)
-    phi = np.zeros(len(tgt_tree.x))
     if len(pairs) == 0:
-        return phi
-    pairs, mask = _pad_pairs(pairs)
-    tp = _pad_bodies(tgt_tree, pairs[:, 0])
-    safe = np.where(tp < 0, 0, tp)
-    y = jnp.asarray(tgt_tree.x, jnp.float32)[jnp.asarray(safe)]
-    M = jnp.asarray(src_M, jnp.float32)[jnp.asarray(pairs[:, 1])]
-    centers = jnp.asarray(src_centers, jnp.float32)[jnp.asarray(pairs[:, 1])]
-    vals = np.asarray(_m2p_vals(ops, M, y, centers, jnp.asarray(mask)))
-    np.add.at(phi, safe.ravel(),
-              np.where(tp.ravel() < 0, 0.0, vals.astype(np.float64).ravel()))
+        return np.zeros(len(tgt_tree.x))
+    src = SimpleNamespace(center=src_centers)   # the planner only needs centers
+    plan = build_interaction_subset(tgt_tree, src, m2p_pairs=pairs)
+    return m2p_apply(tgt_tree, src_M, plan, p=p)
+
+
+# ------------------------------------------------------- plan execution ----
+def execute_fmm_plan(plan: FMMPlan, use_pallas: bool = False,
+                     M=None) -> np.ndarray:
+    """Evaluate a prebuilt FMMPlan: kernels + gathers only, no host-side list
+    construction or padding.  `M` overrides the source multipoles (grafted
+    LETs ship theirs; locally they are rebuilt from the plan's schedules)."""
+    ops = get_operators(plan.p)
+    inter = plan.interactions
+    if M is None:
+        if plan.src_sched is not None:
+            M = upward_pass(plan.src_tree, ops, sched=plan.src_sched)
+        else:
+            M = plan.src_tree.M           # grafted LET: shipped multipoles
+    L = m2l_apply(ops, M, inter)
+    L = downward_pass(plan.tgt_tree, ops, L, sched=plan.tgt_sched)
+    phi = l2p_pass(plan.tgt_tree, ops, L, sched=plan.tgt_sched)
+    phi += p2p_apply(plan.tgt_tree, plan.src_tree, inter, use_pallas=use_pallas)
+    if inter.n_m2p:
+        phi += m2p_apply(plan.tgt_tree, M, inter, p=plan.p)
     return phi
 
 
 def evaluate(tgt_tree: Tree, src_tree: Tree, theta: float = 0.5, p: int = 4,
-             m2l_pairs=None, p2p_pairs=None, use_pallas: bool = False) -> np.ndarray:
-    """Potential at tgt_tree bodies (sorted order) due to src_tree bodies."""
-    ops = get_operators(p)
-    if m2l_pairs is None or p2p_pairs is None:
-        m2l_pairs, p2p_pairs = dual_traversal(tgt_tree, src_tree, theta)
-    M = upward_pass(src_tree, ops)
-    L = m2l_pass(ops, M, tgt_tree, src_tree, m2l_pairs)
-    L = downward_pass(tgt_tree, ops, L)
-    phi = l2p_pass(tgt_tree, ops, L)
-    phi += p2p_pass(tgt_tree, src_tree, p2p_pairs, use_pallas=use_pallas)
-    return phi
+             m2l_pairs=None, p2p_pairs=None, use_pallas: bool = False,
+             plan: FMMPlan | None = None) -> np.ndarray:
+    """Potential at tgt_tree bodies (sorted order) due to src_tree bodies.
+    Pass a prebuilt `plan` (see plan.build_fmm_plan) to skip all host-side
+    geometry work."""
+    if plan is None:
+        plan = build_fmm_plan(tgt_tree, src_tree, theta=theta, p=p,
+                              m2l_pairs=m2l_pairs, p2p_pairs=p2p_pairs)
+    return execute_fmm_plan(plan, use_pallas=use_pallas)
 
 
 def fmm_potential(x, q, theta: float = 0.5, ncrit: int = 64, p: int = 4,

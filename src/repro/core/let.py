@@ -14,6 +14,16 @@ its own tree and ships the minimal subtree:
 
 The receiver *grafts* the received subtree roots — the global tree is never
 materialized (the paper's simplification that keeps the serial code reusable).
+
+Extraction is a *frontier BFS over arrays*: one (box, cell) row per frontier
+entry, a vectorized point-to-box distance / acceptance test per generation,
+and child allocation via segmented prefix sums — so `extract_lets` serves all
+P−1 remote partition boxes of one sender in a single joint pass (Kailasa et
+al.'s "precompute communication metadata once" discipline).  The only Python
+loops are over BFS generations and, at assembly time, over boxes — never over
+cells.  The output is byte-identical to the seed's per-cell deque BFS
+(retained as `repro.core.reference.reference_extract_let`, pinned by golden
+tests) because a FIFO deque already expands cells in level order.
 """
 from __future__ import annotations
 
@@ -21,10 +31,9 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.multipole import MultipoleOperators
-from repro.core.tree import Tree
+from repro.core.tree import Tree, _segmented_arange
 
-__all__ = ["LETData", "extract_let", "graft", "let_nbytes",
+__all__ = ["LETData", "extract_let", "extract_lets", "graft", "let_nbytes",
            "CELL_BYTES", "BODY_BYTES"]
 
 # wire format: center(3f8) + radius(f8) + M(20f8) + 4 structure int32s
@@ -55,64 +64,125 @@ class LETData:
         return self.n_cells * CELL_BYTES + len(self.q) * BODY_BYTES
 
 
-def _dist_point_box(p: np.ndarray, box_lo: np.ndarray, box_hi: np.ndarray) -> float:
-    d = np.maximum(np.maximum(box_lo - p, p - box_hi), 0.0)
-    return float(np.linalg.norm(d))
+def _group_exclusive_cumsum(vals: np.ndarray, groups: np.ndarray) -> np.ndarray:
+    """Row-order exclusive prefix sum of non-negative `vals` within each group."""
+    if len(vals) == 0:
+        return vals.astype(np.int64)
+    order = np.argsort(groups, kind="stable")
+    v = vals[order]
+    g = groups[order]
+    cs = np.cumsum(v) - v                      # exclusive over the grouped rows
+    first = np.ones(len(v), dtype=bool)
+    first[1:] = g[1:] != g[:-1]
+    # cs is nondecreasing (vals >= 0), so a running max of the group-start
+    # values forward-fills each group's base offset
+    base = np.maximum.accumulate(np.where(first, cs, 0))
+    out = np.empty(len(v), dtype=np.int64)
+    out[order] = cs - base
+    return out
+
+
+def extract_lets(tree: Tree, M: np.ndarray, boxes_lo, boxes_hi,
+                 theta: float = 0.5) -> list[LETData]:
+    """Sender-side LET extraction for G remote partition boxes in ONE joint
+    frontier BFS (columns: box id, source cell, per-box output slot)."""
+    M = np.asarray(M)
+    lo = np.atleast_2d(np.asarray(boxes_lo, dtype=np.float64))
+    hi = np.atleast_2d(np.asarray(boxes_hi, dtype=np.float64))
+    G = len(lo)
+    if G == 0:
+        return []
+    center, radius = tree.center, tree.radius
+    t_cs, t_nc, t_bs, t_nb = (tree.child_start, tree.n_child,
+                              tree.body_start, tree.n_body)
+
+    # frontier columns
+    f_g = np.arange(G, dtype=np.int64)
+    f_c = np.zeros(G, dtype=np.int64)
+    f_out = np.zeros(G, dtype=np.int64)
+    cell_count = np.ones(G, dtype=np.int64)    # root slot already allocated
+    body_count = np.zeros(G, dtype=np.int64)
+
+    rec_ch = []          # per-generation record arrays (row order = BFS order)
+    body_g_ch, body_idx_ch = [], []
+    while len(f_g):
+        c = f_c
+        dd = np.maximum(np.maximum(lo[f_g] - center[c], center[c] - hi[f_g]), 0.0)
+        dist = np.linalg.norm(dd, axis=1)
+        trunc = (2.0 * radius[c] < theta * dist) & (c != 0)
+        leaf = ~trunc & (t_nc[c] == 0)
+        expand = ~trunc & ~leaf
+
+        bstart = np.zeros(len(f_g), dtype=np.int64)
+        nbody = np.zeros(len(f_g), dtype=np.int64)
+        cstart = np.zeros(len(f_g), dtype=np.int64)
+        nchild = np.zeros(len(f_g), dtype=np.int64)
+
+        li = np.nonzero(leaf)[0]
+        if len(li):
+            nb = t_nb[c[li]]
+            bstart[li] = body_count[f_g[li]] + _group_exclusive_cumsum(nb, f_g[li])
+            nbody[li] = nb
+            # gather shipped body indices (per-box order follows row order)
+            body_idx_ch.append(np.repeat(t_bs[c[li]], nb) + _segmented_arange(nb))
+            body_g_ch.append(np.repeat(f_g[li], nb))
+            np.add.at(body_count, f_g[li], nb)
+
+        ei = np.nonzero(expand)[0]
+        if len(ei):
+            nc = t_nc[c[ei]]
+            first = cell_count[f_g[ei]] + _group_exclusive_cumsum(nc, f_g[ei])
+            cstart[ei] = first
+            nchild[ei] = nc
+            np.add.at(cell_count, f_g[ei], nc)
+            rep = np.repeat(np.arange(len(ei)), nc)
+            seg = _segmented_arange(nc)
+            child_c = t_cs[c[ei]][rep] + seg
+            child_g = f_g[ei][rep]
+            child_out = first[rep] + seg
+        else:
+            child_c = child_g = child_out = np.zeros(0, dtype=np.int64)
+
+        rec_ch.append((f_g, f_out, c, trunc, cstart, nchild, bstart, nbody))
+        f_g, f_c, f_out = child_g, child_c, child_out
+
+    g_all = np.concatenate([r[0] for r in rec_ch])
+    out_all = np.concatenate([r[1] for r in rec_ch])
+    src_all = np.concatenate([r[2] for r in rec_ch])
+    trunc_all = np.concatenate([r[3] for r in rec_ch])
+    cstart_all = np.concatenate([r[4] for r in rec_ch])
+    nchild_all = np.concatenate([r[5] for r in rec_ch])
+    bstart_all = np.concatenate([r[6] for r in rec_ch])
+    nbody_all = np.concatenate([r[7] for r in rec_ch])
+    bg_all = (np.concatenate(body_g_ch) if body_g_ch else np.zeros(0, np.int64))
+    bidx_all = (np.concatenate(body_idx_ch) if body_idx_ch else np.zeros(0, np.int64))
+
+    lets = []
+    for b in range(G):                      # box-level loop only
+        sel = np.nonzero(g_all == b)[0]
+        sel = sel[np.argsort(out_all[sel], kind="stable")]
+        src = src_all[sel]
+        bsel = bidx_all[bg_all == b]
+        lets.append(LETData(
+            center=center[src].copy(),
+            radius=radius[src].copy(),
+            M=M[src].copy(),
+            child_start=cstart_all[sel],
+            n_child=nchild_all[sel],
+            body_start=bstart_all[sel],
+            n_body=nbody_all[sel],
+            truncated=trunc_all[sel],
+            x=(tree.x[bsel].copy() if len(bsel) else np.zeros((0, 3))),
+            q=(tree.q[bsel].copy() if len(bsel) else np.zeros((0,))),
+        ))
+    return lets
 
 
 def extract_let(tree: Tree, M: np.ndarray, box_lo, box_hi,
                 theta: float = 0.5) -> LETData:
     """Sender-side LET extraction for one remote partition box."""
-    M = np.asarray(M)
-    box_lo = np.asarray(box_lo, dtype=np.float64)
-    box_hi = np.asarray(box_hi, dtype=np.float64)
-
-    # BFS so that every cell's children are CONTIGUOUS in the output arrays
-    # (the traversal contract: children = child_start .. child_start+n_child)
-    from collections import deque
-    cells = [dict(src=0, child_start=0, n_child=0, body_start=0,
-                  n_body=0, truncated=False)]
-    bodies_x, bodies_q = [], []
-    n_bodies = 0
-    queue = deque([0])          # output indices awaiting expansion
-    while queue:
-        out = queue.popleft()
-        c = cells[out]["src"]
-        dist = _dist_point_box(tree.center[c], box_lo, box_hi)
-        if 2.0 * tree.radius[c] < theta * dist and c != 0:
-            cells[out]["truncated"] = True
-            continue
-        if tree.n_child[c] == 0:
-            # boundary leaf: ship bodies
-            s, nb = tree.body_start[c], tree.n_body[c]
-            cells[out]["body_start"] = n_bodies
-            cells[out]["n_body"] = int(nb)
-            n_bodies += int(nb)
-            bodies_x.append(tree.x[s:s + nb])
-            bodies_q.append(tree.q[s:s + nb])
-            continue
-        first = len(cells)
-        nc = int(tree.n_child[c])
-        for k in range(tree.child_start[c], tree.child_start[c] + nc):
-            cells.append(dict(src=int(k), child_start=0, n_child=0,
-                              body_start=0, n_body=0, truncated=False))
-            queue.append(len(cells) - 1)
-        cells[out]["child_start"] = first
-        cells[out]["n_child"] = nc
-
-    src = np.array([c["src"] for c in cells], dtype=np.int64)
-    return LETData(
-        center=tree.center[src].copy(),
-        radius=tree.radius[src].copy(),
-        M=M[src].copy(),
-        child_start=np.array([c["child_start"] for c in cells], dtype=np.int64),
-        n_child=np.array([c["n_child"] for c in cells], dtype=np.int64),
-        body_start=np.array([c["body_start"] for c in cells], dtype=np.int64),
-        n_body=np.array([c["n_body"] for c in cells], dtype=np.int64),
-        truncated=np.array([c["truncated"] for c in cells], dtype=bool),
-        x=(np.concatenate(bodies_x) if bodies_x else np.zeros((0, 3))),
-        q=(np.concatenate(bodies_q) if bodies_q else np.zeros((0,))),
-    )
+    return extract_lets(tree, M, np.asarray(box_lo)[None, :],
+                        np.asarray(box_hi)[None, :], theta)[0]
 
 
 def let_nbytes(let: LETData) -> int:
@@ -120,7 +190,12 @@ def let_nbytes(let: LETData) -> int:
 
 
 class _GraftedTree:
-    """Tree-like view over a received LETData (duck-typed for traversal)."""
+    """Tree-like view over a received LETData (duck-typed for traversal).
+
+    `ncrit` is only a hint here: the plan layer buckets P2P source widths by
+    actual leaf population, so one huge boundary leaf no longer forces every
+    pair to pad to `n_body.max()` (see plan.build_interaction_plan).
+    """
 
     def __init__(self, let: LETData):
         self.center = let.center

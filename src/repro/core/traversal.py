@@ -5,11 +5,25 @@ MAC (exaFMM convention): a cell pair (A, B) is *well separated* iff
 with *tight* radii/centers (squeezed bounding boxes).  The flexible MAC is
 what lets the hybrid-ORB scheme tolerate misaligned local trees (paper §2.2).
 
+The traversal is *frontier-vectorized*: instead of a per-pair Python stack it
+keeps a (K, 2) array of undecided (target, source) cell pairs and advances the
+whole frontier at once — one vectorized MAC test, one vectorized
+leaf/truncation classification, and child expansion via the
+`np.repeat`/`np.cumsum` segmented-arange idiom.  The only Python loop is over
+frontier generations (O(tree depth) iterations), never over pairs or cells.
+
+The seed's per-pair stack version is retained as
+`repro.core.reference.reference_dual_traversal` and the two are pinned to
+produce identical pair *sets* by golden tests (ordering differs: stack vs
+generation order).
+
 Host-side NumPy; outputs are flat pair lists consumed by the JAX evaluator.
 """
 from __future__ import annotations
 
 import numpy as np
+
+from repro.core.tree import _segmented_arange
 
 __all__ = ["dual_traversal", "mac_ok"]
 
@@ -30,39 +44,55 @@ def dual_traversal(tgt_tree, src_tree, theta: float = 0.5, with_m2p: bool = Fals
     because the sender's acceptance criterion 2 R_c < theta * dist(c, box)
     bounds R_c / |y - c| < theta/2 for every body y in the remote box.
     """
-    m2l, p2p, m2p = [], [], []
     tc, tr = tgt_tree.center, tgt_tree.radius
     sc, sr = src_tree.center, src_tree.radius
-    t_leaf, s_leaf = tgt_tree.is_leaf, src_tree.is_leaf
+    t_leaf = np.asarray(tgt_tree.is_leaf)
+    s_leaf = np.asarray(src_tree.is_leaf)
     truncated = getattr(src_tree, "truncated", None)
     if truncated is None:
         truncated = np.zeros(len(sc), dtype=bool)
-    stack = [(0, 0)]
-    while stack:
-        a, b = stack.pop()
-        d = np.linalg.norm(tc[a] - sc[b])
-        if (tr[a] + sr[b]) < theta * d:
-            m2l.append((a, b))
-            continue
-        if t_leaf[a] and s_leaf[b]:
-            if truncated[b]:
-                m2p.append((a, b))
-            else:
-                p2p.append((a, b))
-            continue
+    t_cs, t_nc = tgt_tree.child_start, tgt_tree.n_child
+    s_cs, s_nc = src_tree.child_start, src_tree.n_child
+
+    m2l_ch, p2p_ch, m2p_ch = [], [], []
+    A = np.zeros(1, dtype=np.int64)
+    B = np.zeros(1, dtype=np.int64)
+    while len(A):
+        d = np.linalg.norm(tc[A] - sc[B], axis=1)
+        far = (tr[A] + sr[B]) < theta * d
+        if far.any():
+            m2l_ch.append(np.stack([A[far], B[far]], axis=1))
+            A, B = A[~far], B[~far]
+        both_leaf = t_leaf[A] & s_leaf[B]
+        if both_leaf.any():
+            tb = both_leaf & truncated[B]
+            pb = both_leaf & ~tb
+            if tb.any():
+                m2p_ch.append(np.stack([A[tb], B[tb]], axis=1))
+            if pb.any():
+                p2p_ch.append(np.stack([A[pb], B[pb]], axis=1))
+            A, B = A[~both_leaf], B[~both_leaf]
+        if not len(A):
+            break
         # split the larger cell (or the only splittable one)
-        split_target = (not t_leaf[a]) and (s_leaf[b] or tr[a] >= sr[b])
-        if split_target:
-            cs, nc = tgt_tree.child_start[a], tgt_tree.n_child[a]
-            for c in range(cs, cs + nc):
-                stack.append((c, b))
-        else:
-            cs, nc = src_tree.child_start[b], src_tree.n_child[b]
-            for c in range(cs, cs + nc):
-                stack.append((a, c))
-    m2l = np.asarray(m2l, dtype=np.int64).reshape(-1, 2)
-    p2p = np.asarray(p2p, dtype=np.int64).reshape(-1, 2)
-    m2p = np.asarray(m2p, dtype=np.int64).reshape(-1, 2)
+        split_t = (~t_leaf[A]) & (s_leaf[B] | (tr[A] >= sr[B]))
+        At, Bt = A[split_t], B[split_t]
+        As, Bs = A[~split_t], B[~split_t]
+        nt = t_nc[At]
+        rep_t = np.repeat(np.arange(len(At)), nt)
+        child_t = t_cs[At][rep_t] + _segmented_arange(nt)
+        ns = s_nc[Bs]
+        rep_s = np.repeat(np.arange(len(Bs)), ns)
+        child_s = s_cs[Bs][rep_s] + _segmented_arange(ns)
+        A = np.concatenate([child_t, As[rep_s]])
+        B = np.concatenate([Bt[rep_t], child_s])
+
+    def _cat(chunks):
+        if not chunks:
+            return np.zeros((0, 2), dtype=np.int64)
+        return np.concatenate(chunks, axis=0)
+
+    m2l, p2p, m2p = _cat(m2l_ch), _cat(p2p_ch), _cat(m2p_ch)
     if with_m2p:
         return m2l, p2p, m2p
     assert len(m2p) == 0, "truncated source cells require with_m2p=True"

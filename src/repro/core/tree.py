@@ -6,6 +6,19 @@ JAX/Pallas kernels consume.  Cells squeeze their bounding box to the particles
 they own (the paper's Fig 1(d)), which is what makes the hybrid-ORB local-tree
 scheme competitive: cells are "not aligned in the first place", so partition
 misalignment costs nothing extra.
+
+Construction is *level-synchronous* (Hu, Gumerov & Duraiswami style): each
+refinement level splits every over-full cell in one batch of array ops
+(digit histogram via `np.add.at`, child allocation via `cumsum`), so the only
+Python loop is over tree levels, never over cells.  Cell ids come out in BFS
+order — levels are contiguous index ranges and children of one parent are
+contiguous — which the downstream traversal/plan layers exploit.  Tight
+bounding boxes are computed with segment reductions (`np.minimum.reduceat`
+over the Morton-sorted leaf ranges, then a level-wise scatter-min/max up the
+tree) instead of a per-cell loop.
+
+The seed's per-cell loop construction is retained in
+`repro.core.reference.reference_build_tree` and pinned by golden tests.
 """
 from __future__ import annotations
 
@@ -58,20 +71,20 @@ class Tree:
     def padded_leaf_bodies(self):
         """(n_leaf, ncrit) body indices padded with -1, aligned with .leaves."""
         leaves = self.leaves
-        out = -np.ones((len(leaves), self.ncrit), dtype=np.int64)
-        for i, c in enumerate(leaves):
-            s, n = self.body_start[c], self.n_body[c]
-            out[i, :n] = np.arange(s, s + n)
-        return out
+        nb = self.n_body[leaves]
+        if int(nb.max(initial=0)) > self.ncrit:
+            # depth-capped leaves can exceed ncrit; never truncate silently
+            raise ValueError("leaf population exceeds ncrit; use a wider gather")
+        col = np.arange(self.ncrit, dtype=np.int64)
+        out = self.body_start[leaves, None] + col[None, :]
+        return np.where(col[None, :] < nb[:, None], out, -1)
 
 
-def build_tree(x: np.ndarray, q: np.ndarray, ncrit: int = 64,
-               max_depth: int = 21, bbox=None) -> Tree:
-    """Build an adaptive octree over the *local* bounding box (paper §3: the
-    tree is completely local — no global Morton key)."""
+def _morton_sort(x: np.ndarray, q: np.ndarray, max_depth: int = 21, bbox=None):
+    """Morton-sort bodies over the *local* bounding box (paper §3: the tree is
+    completely local — no global key).  Returns (xs, qs, keys, order, depth)."""
     x = np.asarray(x, dtype=np.float64)
     q = np.asarray(q, dtype=np.float64)
-    n = len(x)
     if bbox is None:
         lo, hi = x.min(axis=0), x.max(axis=0)
     else:
@@ -83,56 +96,104 @@ def build_tree(x: np.ndarray, q: np.ndarray, ncrit: int = 64,
     depth = min(max_depth, 21)
     keys = morton_encode(((x - lo_cube) / (span * 1.0000002) * (1 << depth)).astype(np.uint64), depth)
     order = np.argsort(keys, kind="stable")
-    xs, qs, keys = x[order], q[order], keys[order]
+    return x[order], q[order], keys[order], order, depth
 
-    parent, child_start, n_child = [0], [0], [0]
-    body_start, n_body, level = [0], [n], [0]
-    # recursion over (cell, body range, depth); children appended breadth-last
-    stack = [(0, 0, n, 0)]
-    while stack:
-        cid, s, e, lvl = stack.pop()
-        body_start[cid], n_body[cid] = s, e - s
-        if e - s <= ncrit or lvl >= depth:
-            continue
-        # split by the 3-bit Morton digit at this level
-        shift = 3 * (depth - lvl - 1)
-        digits = (keys[s:e] >> np.uint64(shift)) & np.uint64(7)
-        counts = np.bincount(digits.astype(np.int64), minlength=8)
-        first_child = len(parent)
-        nc = 0
-        off = s
-        for oct_ in range(8):
-            c = counts[oct_]
-            if c == 0:
-                continue
-            parent.append(cid)
-            child_start.append(0)
-            n_child.append(0)
-            body_start.append(off)
-            n_body.append(c)
-            level.append(lvl + 1)
-            stack.append((first_child + nc, off, off + c, lvl + 1))
-            nc += 1
-            off += c
-        child_start[cid], n_child[cid] = first_child, nc
 
+def _segmented_arange(counts: np.ndarray) -> np.ndarray:
+    """[0..c0), [0..c1), ... concatenated — the cumsum/repeat idiom."""
+    counts = np.asarray(counts, dtype=np.int64)
+    total = int(counts.sum())
+    if total == 0:
+        return np.zeros(0, dtype=np.int64)
+    return (np.arange(total, dtype=np.int64)
+            - np.repeat(np.cumsum(counts) - counts, counts))
+
+
+def build_tree(x: np.ndarray, q: np.ndarray, ncrit: int = 64,
+               max_depth: int = 21, bbox=None) -> Tree:
+    """Build an adaptive octree with level-synchronous array passes."""
+    x = np.asarray(x, dtype=np.float64)
+    q = np.asarray(q, dtype=np.float64)
+    n = len(x)
+    if n == 0:
+        raise ValueError("build_tree requires at least one body")
+    xs, qs, keys, order, depth = _morton_sort(x, q, max_depth=max_depth, bbox=bbox)
+
+    # --- structure: split every over-full frontier cell per level ----------
+    parent_ch, cstart_ch, nchild_ch, bstart_ch, nbody_ch, level_ch = [], [], [], [], [], []
+    f_parent = np.zeros(1, dtype=np.int64)   # seed convention: parent[0] == 0
+    f_start = np.zeros(1, dtype=np.int64)
+    f_end = np.array([n], dtype=np.int64)
+    next_id, lvl = 1, 0
+    while len(f_parent):
+        k = len(f_parent)
+        nb = f_end - f_start
+        cs = np.zeros(k, dtype=np.int64)
+        nc = np.zeros(k, dtype=np.int64)
+        split = (nb > ncrit) & (lvl < depth)
+        sidx = np.nonzero(split)[0]
+        if len(sidx):
+            # 3-bit Morton digit histogram for all bodies of all split cells
+            shift = np.uint64(3 * (depth - lvl - 1))
+            per_cell = nb[sidx]
+            body_idx = np.repeat(f_start[sidx], per_cell) + _segmented_arange(per_cell)
+            owner = np.repeat(np.arange(len(sidx)), per_cell)
+            digits = ((keys[body_idx] >> shift) & np.uint64(7)).astype(np.int64)
+            cnt = np.zeros((len(sidx), 8), dtype=np.int64)
+            np.add.at(cnt, (owner, digits), 1)
+            childmask = cnt > 0
+            nchild = childmask.sum(axis=1)
+            nc[sidx] = nchild
+            cs[sidx] = next_id + np.cumsum(nchild) - nchild
+            # children are contiguous because bodies are Morton-sorted
+            off = f_start[sidx, None] + np.cumsum(cnt, axis=1) - cnt
+            new_start = off[childmask]
+            new_n = cnt[childmask]
+            # this level's cells hold ids [next_id - k, next_id)
+            this_level_ids = next_id - k + np.arange(k, dtype=np.int64)
+            new_parent = np.repeat(this_level_ids[sidx], nchild)
+            total_new = int(nchild.sum())
+        else:
+            new_start = new_n = new_parent = np.zeros(0, dtype=np.int64)
+            total_new = 0
+        parent_ch.append(f_parent)
+        cstart_ch.append(cs)
+        nchild_ch.append(nc)
+        bstart_ch.append(f_start)
+        nbody_ch.append(nb)
+        level_ch.append(np.full(k, lvl, dtype=np.int64))
+        f_parent, f_start, f_end = new_parent, new_start, new_start + new_n
+        next_id += total_new
+        lvl += 1
+
+    parent = np.concatenate(parent_ch)
+    child_start = np.concatenate(cstart_ch)
+    n_child = np.concatenate(nchild_ch)
+    body_start = np.concatenate(bstart_ch)
+    n_body = np.concatenate(nbody_ch)
+    level = np.concatenate(level_ch)
     C = len(parent)
-    bmin = np.empty((C, 3))
-    bmax = np.empty((C, 3))
-    for c in range(C):
-        s, nb = body_start[c], n_body[c]
-        pts = xs[s:s + nb]
-        bmin[c] = pts.min(axis=0)
-        bmax[c] = pts.max(axis=0)
+
+    # --- tight bboxes: segment reductions at leaves, scatter-min/max up ----
+    bmin = np.full((C, 3), np.inf)
+    bmax = np.full((C, 3), -np.inf)
+    leaf_ids = np.nonzero(n_child == 0)[0]
+    lorder = np.argsort(body_start[leaf_ids], kind="stable")
+    ls = leaf_ids[lorder]
+    starts = body_start[ls]  # leaf body ranges partition [0, n): starts[0] == 0
+    bmin[ls] = np.minimum.reduceat(xs, starts, axis=0)
+    bmax[ls] = np.maximum.reduceat(xs, starts, axis=0)
+    for top in range(int(level.max()), 0, -1):
+        ids = np.nonzero(level == top)[0]
+        np.minimum.at(bmin, parent[ids], bmin[ids])
+        np.maximum.at(bmax, parent[ids], bmax[ids])
+
     centerc = (bmin + bmax) / 2
     radius = 0.5 * np.linalg.norm(bmax - bmin, axis=1)
     return Tree(
         x=xs, q=qs, perm=order,
-        parent=np.asarray(parent, dtype=np.int64),
-        child_start=np.asarray(child_start, dtype=np.int64),
-        n_child=np.asarray(n_child, dtype=np.int64),
-        body_start=np.asarray(body_start, dtype=np.int64),
-        n_body=np.asarray(n_body, dtype=np.int64),
+        parent=parent, child_start=child_start, n_child=n_child,
+        body_start=body_start, n_body=n_body,
         center=centerc, radius=radius, bbox_min=bmin, bbox_max=bmax,
-        level=np.asarray(level, dtype=np.int64), ncrit=ncrit,
+        level=level, ncrit=ncrit,
     )

@@ -7,14 +7,23 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "parallelism_for"]
+__all__ = ["make_mesh_compat", "make_production_mesh", "parallelism_for"]
+
+
+def make_mesh_compat(shape, axes):
+    """jax.make_mesh with explicit Auto axis_types on jax >= 0.5, plain mesh
+    on older jax (where Auto is the only behavior).  The single home for this
+    version shim — tests and production meshes all route through it."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def parallelism_for(mesh, *, hierarchical: bool = True, q_chunk: int = 256,

@@ -18,8 +18,9 @@ _SCRIPT = textwrap.dedent("""
     from jax.experimental.shard_map import shard_map
     from repro.core import collectives as C
 
-    mesh = jax.make_mesh((8,), ("proc",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh_compat as make_mesh
+
+    mesh = make_mesh((8,), ("proc",))
     ok = {}
 
     x = jnp.arange(8 * 4 * 3, dtype=jnp.float32).reshape(8 * 4, 3)
@@ -38,8 +39,7 @@ _SCRIPT = textwrap.dedent("""
     ok["ring_reduce_scatter"] = bool(np.allclose(got, 8 * np.asarray(x)))
 
     # hierarchical all-reduce over a (pod=2, data=4) mesh == flat psum
-    mesh2 = jax.make_mesh((2, 4), ("pod", "data"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh2 = make_mesh((2, 4), ("pod", "data"))
     y = jnp.arange(8 * 5, dtype=jnp.float32).reshape(8, 5)
     f = shard_map(lambda s: C.hierarchical_all_reduce(s, "data", "pod"),
                   mesh=mesh2, in_specs=P(("pod", "data")), out_specs=P(("pod", "data")))

@@ -12,8 +12,8 @@ _SCRIPT = textwrap.dedent("""
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.analysis.hlo_walk import weighted_analysis
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((2, 4), ("data", "model"))
 
     def f(a, w):
         def body(c, _):
@@ -34,7 +34,10 @@ _SCRIPT = textwrap.dedent("""
     assert res["result_bytes"] > 0
     # XLA's own cost_analysis counts the while body ONCE (the bug the
     # walker exists to fix): it must undercount by ~the trip count
-    raw = c.cost_analysis()["flops"]
+    ca = c.cost_analysis()
+    if isinstance(ca, (list, tuple)):   # older jax returns [dict]
+        ca = ca[0]
+    raw = ca["flops"]
     assert raw < res["dot_flops"] / 3, (raw, res["dot_flops"])
     print("WALK_OK")
 """).strip()

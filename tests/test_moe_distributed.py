@@ -16,8 +16,8 @@ _SCRIPT = textwrap.dedent("""
     from dataclasses import replace
 
     cfg = get_config("dbrx-132b", smoke=True)      # 4 experts top-2
-    mesh = jax.make_mesh((2, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((2, 2), ("data", "model"))
     par = Parallelism(mesh=mesh, data_axes=("data",), model_axis="model",
                       remat=False)
     p = init_params(moe_defs(cfg), jax.random.key(0))

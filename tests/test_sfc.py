@@ -1,6 +1,9 @@
 """SFC key properties — including the Hilbert adjacency invariant, checked
 with hypothesis (consecutive Hilbert keys decode to grid-adjacent cells)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dev dependency (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.partition import sfc

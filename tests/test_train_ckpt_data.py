@@ -65,8 +65,8 @@ def test_elastic_reshard(tmp_path):
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.ckpt import load_checkpoint
-        mesh = jax.make_mesh((4,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((4,), ("data",))
         like = {{"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}}
         sh = {{"w": NamedSharding(mesh, P("data", None))}}
         tree, _ = load_checkpoint({d!r}, 1, like, shardings=sh)
