@@ -1,36 +1,56 @@
 """Fig 7: strong scaling across communication protocols (scaled-down N).
-derived = LogGP exchange ms per protocol at each partition count."""
+
+derived = LogGP exchange ms per protocol at each partition count, plus the
+host-work reuse factor of the layered API: `FMMSession.sweep()` plans the
+geometry ONCE and derives all four protocol schedules from the frozen bytes
+matrix, where the legacy path re-partitioned, re-treed and re-extracted per
+protocol (~4x the host work).
+
+Toy-size smoke (CI): FIG7_N=1500 FIG7_PARTS=4,8 python benchmarks/fig7_protocols.py
+"""
 from __future__ import annotations
 
 import time
 
 import numpy as np
 
-from repro.core import protocols as proto
-from repro.core.distributed_fmm import run_distributed_fmm
+from repro.core.api import FMMSession, PartitionSpec, schedule_comm
 from repro.core.distributions import make_distribution
+from repro.core.protocols import PROTOCOLS
 
 
-def run(n: int = 6000):
+def run(n: int = 6000, parts=(8, 16, 32)):
     x = make_distribution("sphere", n, seed=9)
     q = np.ones(n) / n
+    # warm the jitted upward-pass kernels so t_plan measures steady-state
+    # host-geometry work, not one-time JAX compilation
+    FMMSession.from_points(x, q, PartitionSpec(nparts=parts[0], method="orb"))
     rows = []
-    for P in (8, 16, 32):
-        res = run_distributed_fmm(x, q, nparts=P, method="orb",
-                                  protocol="hsdx", check_delivery=False)
-        B = res.bytes_matrix
-        boxes = _boxes_from(x, P)
+    for P in parts:
         t0 = time.time()
-        entries = []
-        for name in proto.PROTOCOLS:
-            sched = proto.make_schedule(name, B, boxes=boxes)
-            entries.append(f"{name}={proto.loggp_time(sched)*1e3:.3f}ms")
-        wall_us = (time.time() - t0) * 1e6
-        rows.append((f"fig7_P{P}", wall_us, ";".join(entries)))
+        sess = FMMSession.from_points(x, q, PartitionSpec(nparts=P,
+                                                          method="orb"))
+        t_plan = time.time() - t0
+        sweep = sess.sweep(check_delivery=False)
+        entries = [f"{name}={sweep[name].loggp_time*1e3:.3f}ms"
+                   for name in PROTOCOLS]
+        # host-work reuse: 4 x (plan + schedule) vs plan + 4 x schedule
+        t0 = time.time()
+        for name in PROTOCOLS:
+            schedule_comm(sess.geometry, name, check_delivery=False)
+        t_sched = (time.time() - t0) / len(PROTOCOLS)
+        reuse = (len(PROTOCOLS) * (t_plan + t_sched)
+                 / (t_plan + len(PROTOCOLS) * t_sched))
+        entries.append(f"plan_reuse={reuse:.2f}x")
+        rows.append((f"fig7_P{P}", t_sched * 1e6, ";".join(entries)))
     return rows
 
 
-def _boxes_from(x, P):
-    from repro.core.partition.orb import orb_partition
-    _, boxes = orb_partition(x, P)
-    return boxes
+if __name__ == "__main__":
+    import os
+    n = int(os.environ.get("FIG7_N", "6000"))
+    parts = tuple(int(s) for s in
+                  os.environ.get("FIG7_PARTS", "8,16,32").split(","))
+    print("name,us_per_call,derived")
+    for name, us, derived in run(n=n, parts=parts):
+        print(f"{name},{us:.1f},{derived}", flush=True)

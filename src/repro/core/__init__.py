@@ -14,5 +14,9 @@
     protocols.py       alltoallv / NBX / pairwise / HSDX schedules + LogGP
     collectives.py     device-level patterns: ring AG/RS, hierarchical AR,
                        two-stage a2a, grain-chunked overlap, grid exchange
-    distributed_fmm.py multi-partition FMM under any protocol
+    api.py             layered facade: GeometryPlan (one geometry) ->
+                       CommSchedule (any protocol) -> FMMSession (memoized
+                       device views, sweeps, MAC-slack timesteps)
+    distributed_fmm.py legacy multi-partition entry points (deprecated
+                       shims over api.py, pinned byte-identical)
 """

@@ -1,0 +1,694 @@
+"""Layered distributed-FMM API: GeometryPlan -> CommSchedule -> FMMSession.
+
+The paper's contributions are independent axes — partitioning (§3),
+communication granularity (§4.1) and exchange protocol (§4.2–4.3) — and this
+facade keeps them composable instead of entangled:
+
+  1. `plan_geometry(x, q, PartitionSpec) -> GeometryPlan` — ALL host-side
+     geometry, built once with no protocol argument: partitioning, completely
+     local trees, batched sender-side LET extraction (`extract_lets` runs
+     exactly once per sender for all P-1 remote boxes), per-receiver frozen
+     interaction plans against every grafted subtree, and the (P, P) bytes
+     matrix.
+  2. `schedule_comm(geometry, protocol, ...) -> CommSchedule` — a cheap pure
+     function over the frozen bytes matrix and Lemma-1 adjacency boxes.
+     Sweeping all four protocols reuses one `GeometryPlan` with zero
+     re-partitioning, re-treeing or re-extraction.
+  3. `FMMSession` — holds a `GeometryPlan` plus memoized device-resident
+     views of its frozen NumPy index tables (`DeviceMemo`: every table is
+     uploaded exactly once, so executions after the first perform zero
+     host->device transfers of plan tables).  `.potentials(protocol=...)`
+     evaluates once per geometry version, `.sweep()` serves all protocols
+     from that one evaluation, and `.step(new_x)` revalidates the cached
+     plan through MAC slack margins and rebuilds only invalidated
+     partitions (time-stepped N-body with slowly drifting geometry).
+
+MAC slack revalidation (`FMMSession.step`)
+------------------------------------------
+Every structural decision in a plan is a strict inequality with a margin:
+M2L pairs were accepted with  R_A + R_B < theta * d  (margin
+m = theta*d - R_A - R_B > 0) and LET truncations with  2R < theta * dist
+(margin theta*dist - 2R).  If every body of a partition moves by at most
+delta, tight-cell centers shift and radii grow by at most sqrt(3) * delta,
+so a sufficient condition for every accepted decision of a pair (i, j) to
+remain valid is  delta_i + delta_j <= m / (sqrt(3) * (1 + theta)).  The
+per-partition slack budget is therefore
+
+    slack_j = min(margins touching j) / (2 * sqrt(3) * (1 + theta))
+
+(the factor 2 splits the pair budget).  A partition whose drift since the
+plan's reference positions stays within its slack keeps its tree topology,
+interaction lists and LET structure; only the numeric payload (coordinates,
+charges, multipoles) is rebound — expansion centers deliberately stay at
+their build-time positions, which keeps P2M/M2L/L2P mutually consistent
+while the slack bounds the extra truncation error.  A partition that
+exceeds its slack is rebuilt, together with every LET and receiver plan
+that touches it; untouched partitions are reused as-is.
+
+The legacy entry points `run_distributed_fmm` / `build_distributed_plan`
+(repro.core.distributed_fmm) are deprecated shims over these layers, pinned
+byte-identical by golden tests.
+"""
+from __future__ import annotations
+
+import math
+import weakref
+from dataclasses import dataclass, field, replace as dc_replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import protocols as proto
+from repro.core.fmm import (downward_pass, l2p_pass, m2l_apply, m2p_apply,
+                            p2p_apply, upward_pass)
+from repro.core.hsdx import adjacency_from_boxes, graph_diameter
+from repro.core.let import LETData, extract_lets, graft, refresh_let
+from repro.core.multipole import get_operators
+from repro.core.partition.hot import hot_partition
+from repro.core.partition.orb import orb_partition
+from repro.core.plan import (InteractionPlan, TreeSchedules,
+                             build_interaction_plan, build_tree_schedules)
+from repro.core.tree import build_tree
+
+__all__ = ["PartitionSpec", "GeometryPlan", "CommSchedule", "SessionResult",
+           "StepReport", "RemoteBlock", "ReceiverPlan", "DeviceMemo",
+           "plan_geometry", "schedule_comm", "execute_geometry", "FMMSession",
+           "DEFAULT_SFC_BOX_INFLATION"]
+
+# default eps-inflation of SFC partitions' tight boxes when deriving the
+# adjacency graph (fraction of the global span); ORB regions share split
+# planes exactly and need no inflation
+DEFAULT_SFC_BOX_INFLATION = 0.03
+
+_EMPTY_LO, _EMPTY_HI = np.inf, -np.inf      # empty-partition box sentinel
+
+
+# ------------------------------------------------------------------ specs --
+@dataclass(frozen=True)
+class PartitionSpec:
+    """Protocol-independent geometry parameters: everything `plan_geometry`
+    needs, and nothing `schedule_comm` cares about."""
+    nparts: int = 8
+    method: str = "orb"          # "orb" | "hilbert" | "morton"
+    theta: float = 0.5
+    ncrit: int = 64
+    p: int = 4
+    sfc_box_inflation: float = DEFAULT_SFC_BOX_INFLATION
+
+
+@dataclass
+class RemoteBlock:
+    """One sender's grafted LET at one receiver: the frozen interaction plan
+    plus the minimum M2L MAC margin (absolute units) for slack revalidation."""
+    sender: int
+    graft: object                # let._GraftedTree view over lets[(sender, j)]
+    inter: InteractionPlan
+    margin: float
+
+
+@dataclass
+class ReceiverPlan:
+    """One partition's frozen receiver-side geometry."""
+    tree: object
+    sched: TreeSchedules
+    local: InteractionPlan       # own tree vs own tree
+    local_margin: float
+    remote: list                 # [RemoteBlock], ascending sender id
+
+
+@dataclass
+class GeometryPlan:
+    """Layer 1: every protocol-independent artifact, built once per geometry.
+
+    Frozen in spirit — nothing mutates a GeometryPlan in place;
+    `FMMSession.step` derives a successor that shares all untouched
+    components and bumps `version`."""
+    spec: PartitionSpec
+    n: int
+    x0: np.ndarray               # (N, 3) current positions, original order
+    q0: np.ndarray               # (N,)   current charges
+    x_ref: np.ndarray            # (N, 3) positions each partition's structure
+                                 #        was built from (slack reference)
+    part: np.ndarray
+    owners: list                 # per-partition original body indices
+    boxes: np.ndarray            # (P, 2, 3) tight boxes (empty => sentinel)
+    adj_boxes: np.ndarray        # (P, 2, 3) Lemma-1 adjacency boxes
+    trees: list                  # Tree per partition (None if empty)
+    scheds: list                 # TreeSchedules per partition (None if empty)
+    Ms: list                     # per-partition multipoles, NumPy (None if empty)
+    lets: dict                   # (i, j) -> LETData
+    receivers: list              # ReceiverPlan per partition (None if empty)
+    bytes_matrix: np.ndarray     # (P, P) LET bytes i -> j
+    adjacency_degree: float
+    diameter: int
+    slack: np.ndarray            # (P,) per-partition MAC drift budget
+    partition_stats: dict = field(default_factory=dict)
+    version: int = 0
+
+    @property
+    def nparts(self) -> int:
+        return self.spec.nparts
+
+    @property
+    def theta(self) -> float:
+        return self.spec.theta
+
+    @property
+    def p(self) -> int:
+        return self.spec.p
+
+
+@dataclass(frozen=True)
+class CommSchedule:
+    """Layer 2: one protocol's schedule over a frozen GeometryPlan."""
+    protocol: str
+    schedule: proto.Schedule
+    stats: dict
+    loggp_time: float
+    grain_bytes: int | None
+
+    @property
+    def n_stages(self) -> int:
+        return self.schedule.n_stages
+
+
+@dataclass(frozen=True)
+class SessionResult:
+    """One protocol's end-to-end answer: the (shared) potential plus this
+    protocol's communication accounting."""
+    phi: np.ndarray
+    protocol: str
+    comm: CommSchedule
+    bytes_matrix: np.ndarray
+    partition_stats: dict
+    adjacency_degree: float
+    diameter: int
+
+    @property
+    def schedule_stats(self) -> dict:
+        return self.comm.stats
+
+    @property
+    def loggp_time(self) -> float:
+        return self.comm.loggp_time
+
+    @property
+    def n_stages(self) -> int:
+        return self.comm.n_stages
+
+
+@dataclass(frozen=True)
+class StepReport:
+    """What `FMMSession.step` did: which partitions kept their cached
+    structure, which were numerically refreshed, which were rebuilt."""
+    cache_hit: bool              # True iff nothing changed at all
+    rebuilt: tuple               # partitions whose drift exceeded their slack
+    refreshed: tuple             # structure kept; payload rebound
+    shift: tuple                 # per-partition max drift vs x_ref
+    slack: tuple                 # per-partition budget the shift was tested against
+    version: int                 # geometry version after the step
+
+
+# ------------------------------------------------------------ device memo --
+class DeviceMemo:
+    """Memoized host->device uploads keyed by (array identity, dtype).
+
+    Drop-in for `jnp.asarray` in the fmm executors: the first execution
+    uploads each frozen plan table once; later executions reuse the cached
+    device view (zero transfers).  Entries are anchored by a *weak*
+    reference to the host array: while the array lives, `id()` stays unique
+    and the view is served from cache; when a `step` replaces it (new
+    positions, multipoles, LET payloads) and the old geometry is dropped,
+    the entry self-evicts — long-running sessions do not accumulate stale
+    host or device buffers."""
+
+    def __init__(self):
+        self._views: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __call__(self, arr, dtype=None):
+        if isinstance(arr, jax.Array):      # already device-resident
+            return arr if dtype is None else jnp.asarray(arr, dtype)
+        key = (id(arr), None if dtype is None else np.dtype(dtype).name)
+        hit = self._views.get(key)
+        if hit is not None:
+            self.hits += 1
+            return hit[1]
+        self.misses += 1
+        # jnp.array (copy), not jnp.asarray: the CPU backend can alias the
+        # host buffer on dtype-preserving uploads, which would keep replaced
+        # arrays alive through the cached device view and defeat eviction
+        dev = jnp.array(arr, dtype=dtype)
+        try:
+            anchor = weakref.ref(arr, lambda _, k=key: self._views.pop(k, None))
+        except TypeError:                   # non-weakrefable input: pin it
+            anchor = arr
+        self._views[key] = (anchor, dev)
+        return dev
+
+    def __len__(self) -> int:
+        return len(self._views)
+
+
+# --------------------------------------------------------------- layer 1 ---
+def _partition(x, nparts, method,
+               sfc_box_inflation: float = DEFAULT_SFC_BOX_INFLATION):
+    """Returns (part, tight_boxes, adjacency_boxes).  ORB regions share split
+    planes exactly; SFC partitions fall back to eps-inflated tight boxes.
+    Partitions holding no points carry the empty-box sentinel (lo=+inf,
+    hi=-inf), which survives inflation and is skipped by Lemma-1 adjacency
+    and LET extraction."""
+    if method == "orb":
+        part, tight, regions = orb_partition(x, nparts, regions=True)
+        return part, tight, regions
+    if method in ("hilbert", "morton"):
+        part, _ = hot_partition(x, nparts, curve=method)
+        boxes = np.empty((nparts, 2, 3))
+        boxes[:, 0], boxes[:, 1] = _EMPTY_LO, _EMPTY_HI
+        for p in range(nparts):
+            pts = x[part == p]
+            if len(pts):
+                boxes[p, 0], boxes[p, 1] = pts.min(axis=0), pts.max(axis=0)
+        span = (x.max(axis=0) - x.min(axis=0)).max()
+        infl = boxes.copy()
+        infl[:, 0] -= sfc_box_inflation * span
+        infl[:, 1] += sfc_box_inflation * span
+        return part, boxes, infl
+    raise ValueError(method)
+
+
+def _m2l_margin(inter: InteractionPlan, tgt, src, theta: float) -> float:
+    """Min over the plan's valid M2L pairs of theta*d - (R_a + R_b) — the
+    absolute distance the MAC has to spare before any accepted pair flips."""
+    if inter.n_m2l == 0:
+        return float("inf")
+    a = inter.m2l_a[:inter.n_m2l]
+    b = inter.m2l_b[:inter.n_m2l]
+    d = np.linalg.norm(np.asarray(tgt.center)[a] - np.asarray(src.center)[b],
+                       axis=1)
+    return float(np.min(theta * d
+                        - (np.asarray(tgt.radius)[a] + np.asarray(src.radius)[b])))
+
+
+def _slack_budget(nparts: int, theta: float, receivers: list,
+                  lets: dict) -> np.ndarray:
+    """Per-partition drift budget from the minimum MAC / truncation margin of
+    every plan and LET the partition participates in (module docstring)."""
+    margin = np.full(nparts, np.inf)
+    for j, r in enumerate(receivers):
+        if r is None:
+            continue
+        margin[j] = min(margin[j], r.local_margin)
+        for rb in r.remote:
+            margin[rb.sender] = min(margin[rb.sender], rb.margin)
+            margin[j] = min(margin[j], rb.margin)
+    for (i, j), let in lets.items():
+        margin[i] = min(margin[i], let.trunc_margin)
+        margin[j] = min(margin[j], let.trunc_margin)
+    return np.maximum(margin, 0.0) / (2.0 * math.sqrt(3.0) * (1.0 + theta))
+
+
+def _remote_block(i: int, let: LETData, tree, theta: float) -> RemoteBlock:
+    g = graft(let)
+    inter = build_interaction_plan(tree, g, theta, with_m2p=True)
+    return RemoteBlock(sender=i, graft=g, inter=inter,
+                       margin=_m2l_margin(inter, tree, g, theta))
+
+
+def plan_geometry(x, q, spec: PartitionSpec | None = None,
+                  **overrides) -> GeometryPlan:
+    """Layer 1: partition, build local trees, extract every LET (one batched
+    `extract_lets` call per sender), traverse every receiver pair — with no
+    protocol argument.  Keyword overrides patch the spec:
+    `plan_geometry(x, q, nparts=16, method="hilbert")`."""
+    spec = dc_replace(spec or PartitionSpec(), **overrides)
+    x = np.asarray(x, dtype=np.float64)
+    q = np.asarray(q, dtype=np.float64)
+    n = len(x)
+    P = spec.nparts
+    part, boxes, adj_boxes = _partition(x, P, spec.method,
+                                        sfc_box_inflation=spec.sfc_box_inflation)
+    ops = get_operators(spec.p)
+
+    # --- completely local trees (local bounding box, tight cells; §3) ------
+    owners, trees, scheds, Ms = [], [], [], []
+    for pid in range(P):
+        idx = np.nonzero(part == pid)[0]
+        owners.append(idx)
+        if len(idx) == 0:
+            trees.append(None)
+            scheds.append(None)
+            Ms.append(None)
+            continue
+        t = build_tree(x[idx], q[idx], ncrit=spec.ncrit)
+        trees.append(t)
+        scheds.append(build_tree_schedules(t))
+        Ms.append(np.asarray(upward_pass(t, ops, sched=scheds[-1])))
+
+    # --- sender-initiated LET extraction: all remote boxes per sender in one
+    #     batched frontier pass; empty partitions neither send nor receive ---
+    lets: dict[tuple[int, int], LETData] = {}
+    B = np.zeros((P, P), dtype=np.int64)
+    for i in range(P):
+        if trees[i] is None:
+            continue
+        others = np.array([j for j in range(P)
+                           if j != i and trees[j] is not None], dtype=np.int64)
+        if len(others) == 0:
+            continue
+        for j, let in zip(others, extract_lets(trees[i], Ms[i],
+                                               boxes[others, 0],
+                                               boxes[others, 1], spec.theta)):
+            lets[(i, int(j))] = let
+            B[i, j] = let.nbytes
+
+    # --- receiver side: graft + traverse ONCE into frozen plans ------------
+    receivers: list = []
+    for j in range(P):
+        if trees[j] is None:
+            receivers.append(None)
+            continue
+        t = trees[j]
+        local = build_interaction_plan(t, t, spec.theta)
+        remote = [_remote_block(i, lets[(i, j)], t, spec.theta)
+                  for i in range(P) if (i, j) in lets]
+        receivers.append(ReceiverPlan(
+            tree=t, sched=scheds[j], local=local,
+            local_margin=_m2l_margin(local, t, t, spec.theta), remote=remote))
+
+    adj = adjacency_from_boxes(adj_boxes)
+    deg = float(np.max([len(a) for a in adj]))
+    return GeometryPlan(
+        spec=spec, n=n, x0=x.copy(), q0=q.copy(), x_ref=x.copy(), part=part,
+        owners=owners, boxes=boxes, adj_boxes=adj_boxes, trees=trees,
+        scheds=scheds, Ms=Ms, lets=lets, receivers=receivers, bytes_matrix=B,
+        adjacency_degree=deg, diameter=graph_diameter(adj),
+        slack=_slack_budget(P, spec.theta, receivers, lets),
+        partition_stats=dict(nparts=P, method=spec.method),
+    )
+
+
+# --------------------------------------------------------------- layer 2 ---
+def schedule_comm(geometry, protocol: str = "hsdx",
+                  prm: proto.LogGPParams | None = None,
+                  grain_bytes: int | None = None,
+                  check_delivery: bool = True) -> CommSchedule:
+    """Layer 2: a pure function over the geometry's frozen bytes matrix and
+    adjacency boxes — no partitioning, trees, traversal or LET work, so a
+    protocol sweep costs four cheap schedule constructions, not four
+    geometry builds."""
+    B = geometry.bytes_matrix
+    sched = proto.make_schedule(protocol, B, boxes=geometry.adj_boxes)
+    if check_delivery:
+        delivered = proto.simulate_delivery(sched)
+        expect = {(i, j): int(B[i, j]) for i in range(len(B))
+                  for j in range(len(B)) if i != j and B[i, j] > 0}
+        if delivered != expect:
+            raise RuntimeError(f"{protocol} failed to deliver the LET")
+    return CommSchedule(
+        protocol=protocol, schedule=sched, stats=proto.schedule_stats(sched),
+        loggp_time=proto.loggp_time(sched, prm=prm, grain_bytes=grain_bytes),
+        grain_bytes=grain_bytes)
+
+
+# --------------------------------------------------------------- executor --
+def execute_geometry(geo, use_pallas: bool = False, asarray=None) -> np.ndarray:
+    """Kernels + gathers only: no traversal, no list building, no padding.
+    Works on any plan-shaped object (GeometryPlan or the legacy
+    DistributedPlan).  With `asarray=DeviceMemo(...)`, every frozen index
+    table is uploaded to the device at most once across calls."""
+    ops = get_operators(geo.p)
+    phi = np.zeros(geo.n)
+    for j in range(geo.nparts):
+        r = geo.receivers[j]
+        if r is None:
+            continue
+        t = r.tree
+        L = m2l_apply(ops, geo.Ms[j], r.local, asarray=asarray)
+        phi_local = p2p_apply(t, t, r.local, use_pallas=use_pallas,
+                              asarray=asarray)
+        for rb in r.remote:
+            if rb.inter.n_m2l:
+                L = L + m2l_apply(ops, rb.graft.M, rb.inter, asarray=asarray)
+            if rb.inter.n_p2p:
+                phi_local += p2p_apply(t, rb.graft, rb.inter,
+                                       use_pallas=use_pallas, asarray=asarray)
+            if rb.inter.n_m2p:
+                phi_local += m2p_apply(t, rb.graft.M, rb.inter, p=geo.p,
+                                       asarray=asarray)
+        L = downward_pass(t, ops, L, sched=r.sched, asarray=asarray)
+        phi_local += l2p_pass(t, ops, L, sched=r.sched, asarray=asarray)
+        phi[geo.owners[j][t.perm]] = phi_local
+    return phi
+
+
+# --------------------------------------------------------------- layer 3 ---
+class FMMSession:
+    """Layer 3: one geometry, all protocols, many timesteps.
+
+    Holds a `GeometryPlan` plus a `DeviceMemo` of its frozen index tables:
+    the first evaluation uploads each table once; every later evaluation is
+    kernels-only with zero host->device plan transfers.  `potentials` caches
+    the (protocol-independent) potential per geometry version, so
+    `.sweep()` answers all four protocols from a single execution."""
+
+    def __init__(self, geometry: GeometryPlan, use_pallas: bool = False):
+        self._geo = geometry
+        self.use_pallas = use_pallas
+        self._memo = DeviceMemo()
+        self._comm_cache: dict = {}
+        self._phi: np.ndarray | None = None
+        self._phi_version = -1
+
+    @classmethod
+    def from_points(cls, x, q, spec: PartitionSpec | None = None,
+                    use_pallas: bool = False, **overrides) -> "FMMSession":
+        return cls(plan_geometry(x, q, spec, **overrides),
+                   use_pallas=use_pallas)
+
+    @property
+    def geometry(self) -> GeometryPlan:
+        return self._geo
+
+    @property
+    def memo(self) -> DeviceMemo:
+        return self._memo
+
+    # ------------------------------------------------------------- comm ---
+    def comm(self, protocol: str = "hsdx", grain_bytes: int | None = None,
+             prm: proto.LogGPParams | None = None,
+             check_delivery: bool = True) -> CommSchedule:
+        """Memoized `schedule_comm` (cache dropped when a step rebuilds any
+        partition, i.e. whenever the bytes matrix can change)."""
+        key = (protocol, grain_bytes, check_delivery)
+        if prm is None and key in self._comm_cache:
+            return self._comm_cache[key]
+        cs = schedule_comm(self._geo, protocol, prm=prm,
+                           grain_bytes=grain_bytes,
+                           check_delivery=check_delivery)
+        if prm is None:
+            self._comm_cache[key] = cs
+        return cs
+
+    # ------------------------------------------------------------ kernels -
+    def evaluate(self) -> np.ndarray:
+        """Run the kernel pipeline now (ignoring the potential cache) against
+        memoized device views; refreshes the cached potential.  The returned
+        array is marked read-only: it is shared by every SessionResult of
+        this geometry version, so in-place mutation would corrupt the cache
+        — copy it to post-process."""
+        phi = execute_geometry(self._geo, use_pallas=self.use_pallas,
+                               asarray=self._memo)
+        phi.setflags(write=False)
+        self._phi, self._phi_version = phi, self._geo.version
+        return phi
+
+    def potentials(self, protocol: str = "hsdx",
+                   grain_bytes: int | None = None,
+                   prm: proto.LogGPParams | None = None,
+                   check_delivery: bool = True) -> SessionResult:
+        """Potential (original body order) + this protocol's communication
+        accounting.  The potential is protocol-independent and computed once
+        per geometry version."""
+        cs = self.comm(protocol, grain_bytes=grain_bytes, prm=prm,
+                       check_delivery=check_delivery)
+        if self._phi is None or self._phi_version != self._geo.version:
+            self.evaluate()
+        return SessionResult(
+            phi=self._phi, protocol=protocol, comm=cs,
+            bytes_matrix=self._geo.bytes_matrix,
+            partition_stats=self._geo.partition_stats,
+            adjacency_degree=self._geo.adjacency_degree,
+            diameter=self._geo.diameter)
+
+    def sweep(self, protocols=proto.PROTOCOLS,
+              grain_bytes: int | None = None,
+              prm: proto.LogGPParams | None = None,
+              check_delivery: bool = True) -> dict:
+        """All protocols from one GeometryPlan and one kernel execution."""
+        return {name: self.potentials(name, grain_bytes=grain_bytes, prm=prm,
+                                      check_delivery=check_delivery)
+                for name in protocols}
+
+    # ------------------------------------------------------------- step ---
+    def step(self, new_x, new_q=None) -> StepReport:
+        """Advance to new body positions/charges, reusing every cached
+        structure the MAC slack margins still cover (module docstring).
+
+        Unmoved bodies are a 100% cache hit: the geometry object, its
+        version, the device memo and the cached potential are all untouched.
+        Drift within a partition's slack rebinds that partition's numeric
+        payload (positions, multipoles, shipped LET bodies) onto the cached
+        index structure; drift beyond it rebuilds the partition and exactly
+        the LETs / receiver plans that touch it."""
+        geo = self._geo
+        spec = geo.spec
+        P = spec.nparts
+        new_x = np.array(new_x, dtype=np.float64)
+        if new_x.shape != (geo.n, 3):
+            raise ValueError(f"step: expected positions {(geo.n, 3)}, "
+                             f"got {new_x.shape}")
+        new_q = geo.q0 if new_q is None else np.array(new_q, dtype=np.float64)
+        if new_q.shape != (geo.n,):
+            raise ValueError(f"step: expected charges {(geo.n,)}, "
+                             f"got {new_q.shape}")
+
+        delta = np.zeros(P)                 # drift vs structure reference
+        stale = np.zeros(P, dtype=bool)     # numeric payload out of date
+        for j in range(P):
+            idx = geo.owners[j]
+            if len(idx) == 0:
+                continue
+            delta[j] = math.sqrt(float(
+                ((new_x[idx] - geo.x_ref[idx]) ** 2).sum(axis=1).max()))
+            stale[j] = (not np.array_equal(new_x[idx], geo.x0[idx])
+                        or not np.array_equal(new_q[idx], geo.q0[idx]))
+
+        rebuilt = tuple(int(j) for j in range(P)
+                        if stale[j] and delta[j] > geo.slack[j])
+        refreshed = tuple(int(j) for j in range(P)
+                          if stale[j] and j not in rebuilt)
+        report = StepReport(cache_hit=not (rebuilt or refreshed),
+                            rebuilt=rebuilt, refreshed=refreshed,
+                            shift=tuple(delta.tolist()),
+                            slack=tuple(geo.slack.tolist()),
+                            version=geo.version + bool(rebuilt or refreshed))
+        if report.cache_hit:
+            return report
+
+        self._geo = self._advance(geo, new_x, new_q, delta,
+                                  set(rebuilt), set(refreshed))
+        self._phi = None
+        if rebuilt:                         # bytes matrix / adjacency changed
+            self._comm_cache.clear()
+        return report
+
+    @staticmethod
+    def _advance(geo: GeometryPlan, new_x, new_q, delta,
+                 rebuilt: set, refreshed: set) -> GeometryPlan:
+        spec = geo.spec
+        P = spec.nparts
+        ops = get_operators(spec.p)
+        touched = rebuilt | refreshed
+        trees, scheds, Ms = list(geo.trees), list(geo.scheds), list(geo.Ms)
+        boxes, adj_boxes = geo.boxes.copy(), geo.adj_boxes.copy()
+        lets, B = dict(geo.lets), geo.bytes_matrix.copy()
+        x_ref = geo.x_ref.copy()
+
+        # 1. rebuild invalidated partitions' local structure from scratch
+        for j in rebuilt:
+            idx = geo.owners[j]
+            t = build_tree(new_x[idx], new_q[idx], ncrit=spec.ncrit)
+            trees[j], scheds[j] = t, build_tree_schedules(t)
+            Ms[j] = np.asarray(upward_pass(t, ops, sched=scheds[j]))
+            boxes[j, 0] = new_x[idx].min(axis=0)
+            boxes[j, 1] = new_x[idx].max(axis=0)
+            # union-expand the adjacency box: Lemma-1 neighbor sets only grow,
+            # so cached HSDX reachability stays conservative
+            adj_boxes[j, 0] = np.minimum(adj_boxes[j, 0], boxes[j, 0])
+            adj_boxes[j, 1] = np.maximum(adj_boxes[j, 1], boxes[j, 1])
+            x_ref[idx] = new_x[idx]
+
+        # 2. drift within slack: same structure, rebound coordinates/charges
+        #    and recomputed multipoles about the build-time expansion centers
+        for j in refreshed:
+            idx = geo.owners[j]
+            t = trees[j]
+            t = dc_replace(t, x=new_x[idx][t.perm], q=new_q[idx][t.perm])
+            trees[j] = t
+            Ms[j] = np.asarray(upward_pass(t, ops, sched=scheds[j]))
+
+        # 3. LETs: re-extract a pair iff either end was rebuilt; rebind the
+        #    payload iff only the sender drifted within slack
+        for i in range(P):
+            if trees[i] is None:
+                continue
+            targets = [j for j in range(P) if j != i and trees[j] is not None
+                       and (i in rebuilt or j in rebuilt)]
+            if targets:
+                tj = np.asarray(targets)
+                lo, hi = boxes[tj, 0].copy(), boxes[tj, 1].copy()
+                # a valid-but-drifted receiver can poke past its build-time
+                # tight box by at most its drift — extract conservatively
+                pad = np.array([delta[j] if j not in rebuilt else 0.0
+                                for j in targets])
+                lo -= pad[:, None]
+                hi += pad[:, None]
+                for j, let in zip(targets, extract_lets(trees[i], Ms[i],
+                                                        lo, hi, spec.theta)):
+                    lets[(i, j)] = let
+                    B[i, j] = let.nbytes
+            if i in refreshed:      # rebuilt senders were re-extracted above
+                for j in range(P):
+                    if j != i and (i, j) in lets and j not in rebuilt:
+                        lets[(i, j)] = refresh_let(lets[(i, j)], trees[i],
+                                                   Ms[i])
+
+        # 4. receiver plans: re-traverse a pair iff either end was rebuilt;
+        #    re-graft (cheap view) iff its LET payload was rebound
+        receivers = list(geo.receivers)
+        for j in range(P):
+            if trees[j] is None:
+                continue
+            r = receivers[j]
+            senders = [i for i in range(P) if (i, j) in lets]
+            if j not in touched and not any(i in touched for i in senders):
+                continue
+            old = {rb.sender: rb for rb in r.remote}
+            remote = []
+            for i in senders:
+                if i in rebuilt or j in rebuilt:
+                    remote.append(_remote_block(i, lets[(i, j)], trees[j],
+                                                spec.theta))
+                elif i in touched:
+                    rb = old[i]
+                    remote.append(RemoteBlock(sender=i, graft=graft(lets[(i, j)]),
+                                              inter=rb.inter, margin=rb.margin))
+                else:
+                    remote.append(old[i])
+            if j in rebuilt:
+                local = build_interaction_plan(trees[j], trees[j], spec.theta)
+                lm = _m2l_margin(local, trees[j], trees[j], spec.theta)
+            else:
+                local, lm = r.local, r.local_margin
+            receivers[j] = ReceiverPlan(tree=trees[j], sched=scheds[j],
+                                        local=local, local_margin=lm,
+                                        remote=remote)
+
+        if rebuilt:
+            adj = adjacency_from_boxes(adj_boxes)
+            deg = float(np.max([len(a) for a in adj]))
+            diam = graph_diameter(adj)
+            slack = _slack_budget(P, spec.theta, receivers, lets)
+        else:
+            deg, diam, slack = geo.adjacency_degree, geo.diameter, geo.slack
+
+        return GeometryPlan(
+            spec=spec, n=geo.n, x0=new_x, q0=new_q, x_ref=x_ref,
+            part=geo.part, owners=geo.owners, boxes=boxes,
+            adj_boxes=adj_boxes, trees=trees, scheds=scheds, Ms=Ms, lets=lets,
+            receivers=receivers, bytes_matrix=B, adjacency_degree=deg,
+            diameter=diam, slack=slack,
+            partition_stats=geo.partition_stats, version=geo.version + 1)

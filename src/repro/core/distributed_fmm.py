@@ -1,46 +1,43 @@
-"""Multi-partition FMM: hybrid partitioning + local trees + LET exchange
-under any of the four protocols (§2-§4 end to end).
+"""Legacy multi-partition FMM entry points — thin shims over repro.core.api.
 
-This is the host-level (NumPy index plumbing + JAX arithmetic) executor used
-for correctness and for the paper's communication accounting.  The device-
-level collective expression of the same schedules lives in collectives.py and
-launch/dryrun.py.
+The paper's pipeline now lives in three composable layers (see
+repro.core.api): `plan_geometry` (partitioning + local trees + batched LET
+extraction + receiver interaction plans, protocol-free), `schedule_comm`
+(cheap pure protocol scheduling over the frozen bytes matrix) and
+`FMMSession` (memoized device-resident execution, protocol sweeps, and
+MAC-slack timestep revalidation).
 
-The pipeline follows the plan/execute split (repro.core.plan):
-`build_distributed_plan` does all host-side geometry once — partitioning,
-local trees, sender-side batched LET extraction (`extract_lets`, all P−1
-boxes per sender in one pass), protocol scheduling, and the per-receiver
-interaction plans against every grafted subtree.  `execute_distributed_plan`
-then runs kernels + gathers only, so the same `DistributedPlan` can be
-evaluated repeatedly (time-stepping, protocol sweeps) with zero traversal,
-list construction or padding work.
+`run_distributed_fmm` and `build_distributed_plan` are retained as
+*deprecated* shims that compose those layers exactly as the monolithic
+implementation did — golden tests pin them byte-identical to the new path.
+Each warns `DeprecationWarning` exactly once per process.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import protocols as proto
-from repro.core.fmm import (direct_potential, downward_pass, l2p_pass,
-                            m2l_apply, m2p_apply, p2p_apply, upward_pass)
-from repro.core.hsdx import adjacency_from_boxes, graph_diameter
-from repro.core.let import LETData, extract_lets, graft
-from repro.core.multipole import get_operators
-from repro.core.partition.hot import hot_partition
-from repro.core.partition.orb import orb_partition
-from repro.core.plan import (InteractionPlan, TreeSchedules,
-                             build_interaction_plan, build_tree_schedules)
-from repro.core.tree import build_tree
+from repro.core import api
+from repro.core.api import (DEFAULT_SFC_BOX_INFLATION, PartitionSpec,
+                            execute_geometry)
 
 __all__ = ["DistributedFMM", "DistributedPlan", "build_distributed_plan",
-           "execute_distributed_plan", "run_distributed_fmm"]
+           "execute_distributed_plan", "run_distributed_fmm",
+           "DEFAULT_SFC_BOX_INFLATION"]
 
-# default eps-inflation of SFC partitions' tight boxes when deriving the
-# adjacency graph (fraction of the global span); ORB regions share split
-# planes exactly and need no inflation
-DEFAULT_SFC_BOX_INFLATION = 0.03
+_DEPRECATION_WARNED: set = set()
+
+
+def _warn_once(name: str, replacement: str) -> None:
+    if name in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(name)
+    warnings.warn(
+        f"{name} is deprecated; use {replacement} from repro.core.api "
+        "(one GeometryPlan serves all protocols and timesteps)",
+        DeprecationWarning, stacklevel=3)
 
 
 @dataclass
@@ -56,17 +53,9 @@ class DistributedFMM:
 
 
 @dataclass
-class _ReceiverPlan:
-    """One partition's frozen receiver-side geometry."""
-    tree: object
-    sched: TreeSchedules
-    local: InteractionPlan                       # own tree vs own tree
-    remote: list                                 # [(sender, graft, InteractionPlan)]
-
-
-@dataclass
 class DistributedPlan:
-    """Everything `execute_distributed_plan` needs — built once, run many."""
+    """Legacy fused plan: one GeometryPlan + one CommSchedule flattened into
+    the pre-layering shape `execute_distributed_plan` consumes."""
     n: int
     nparts: int
     theta: float
@@ -78,7 +67,7 @@ class DistributedPlan:
     trees: list
     Ms: list                                     # per-partition multipoles (np)
     lets: dict                                   # (i, j) -> LETData
-    receivers: list                              # _ReceiverPlan per partition
+    receivers: list                              # api.ReceiverPlan per partition
     bytes_matrix: np.ndarray
     schedule_stats: dict
     loggp_time: float
@@ -88,26 +77,10 @@ class DistributedPlan:
     partition_stats: dict = field(default_factory=dict)
 
 
-def _partition(x, nparts, method,
-               sfc_box_inflation: float = DEFAULT_SFC_BOX_INFLATION):
-    """Returns (part, tight_boxes, adjacency_boxes).  ORB regions share split
-    planes exactly; SFC partitions fall back to eps-inflated tight boxes."""
-    if method == "orb":
-        part, tight, regions = orb_partition(x, nparts, regions=True)
-        return part, tight, regions
-    if method in ("hilbert", "morton"):
-        part, _ = hot_partition(x, nparts, curve=method)
-        boxes = np.zeros((nparts, 2, 3))
-        for p in range(nparts):
-            pts = x[part == p]
-            if len(pts):
-                boxes[p, 0], boxes[p, 1] = pts.min(axis=0), pts.max(axis=0)
-        span = (x.max(axis=0) - x.min(axis=0)).max()
-        infl = boxes.copy()
-        infl[:, 0] -= sfc_box_inflation * span
-        infl[:, 1] += sfc_box_inflation * span
-        return part, boxes, infl
-    raise ValueError(method)
+def _spec(nparts, method, theta, ncrit, p, sfc_box_inflation) -> PartitionSpec:
+    return PartitionSpec(nparts=nparts, method=method, theta=theta,
+                         ncrit=ncrit, p=p,
+                         sfc_box_inflation=sfc_box_inflation)
 
 
 def build_distributed_plan(x, q, nparts: int = 8, method: str = "orb",
@@ -117,94 +90,28 @@ def build_distributed_plan(x, q, nparts: int = 8, method: str = "orb",
                            check_delivery: bool = True,
                            sfc_box_inflation: float = DEFAULT_SFC_BOX_INFLATION,
                            ) -> DistributedPlan:
-    """All host-side geometry + communication metadata, precomputed once."""
-    x = np.asarray(x, dtype=np.float64)
-    q = np.asarray(q, dtype=np.float64)
-    n = len(x)
-    part, boxes, adj_boxes = _partition(x, nparts, method,
-                                        sfc_box_inflation=sfc_box_inflation)
-    ops = get_operators(p)
-
-    # --- completely local trees (local bounding box, tight cells; §3) ------
-    trees, Ms, owners, scheds = [], [], [], []
-    for pid in range(nparts):
-        idx = np.nonzero(part == pid)[0]
-        owners.append(idx)
-        t = build_tree(x[idx], q[idx], ncrit=ncrit)
-        trees.append(t)
-        scheds.append(build_tree_schedules(t))
-        Ms.append(np.asarray(upward_pass(t, ops, sched=scheds[-1])))
-
-    # --- sender-initiated LET extraction: all P-1 boxes per sender in one
-    #     batched frontier pass -------------------------------------------
-    lets: dict[tuple[int, int], LETData] = {}
-    B = np.zeros((nparts, nparts), dtype=np.int64)
-    for i in range(nparts):
-        others = np.array([j for j in range(nparts) if j != i], dtype=np.int64)
-        for j, let in zip(others, extract_lets(trees[i], Ms[i],
-                                               boxes[others, 0],
-                                               boxes[others, 1], theta)):
-            lets[(i, int(j))] = let
-            B[i, j] = let.nbytes
-
-    # --- protocol schedule + delivery check --------------------------------
-    sched = proto.make_schedule(protocol, B, boxes=adj_boxes)
-    if check_delivery:
-        delivered = proto.simulate_delivery(sched)
-        expect = {(i, j): int(B[i, j]) for i in range(nparts)
-                  for j in range(nparts) if i != j and B[i, j] > 0}
-        assert delivered == expect, f"{protocol} failed to deliver the LET"
-    stats = proto.schedule_stats(sched)
-    t_model = proto.loggp_time(sched, grain_bytes=grain_bytes)
-
-    # --- receiver side: graft + traverse ONCE into frozen plans ------------
-    receivers = []
-    for j in range(nparts):
-        t = trees[j]
-        local = build_interaction_plan(t, t, theta)
-        remote = []
-        for i in range(nparts):
-            if i == j:
-                continue
-            g = graft(lets[(i, j)])
-            remote.append((i, g, build_interaction_plan(t, g, theta,
-                                                        with_m2p=True)))
-        receivers.append(_ReceiverPlan(tree=t, sched=scheds[j], local=local,
-                                       remote=remote))
-
-    adj = adjacency_from_boxes(adj_boxes)
-    deg = float(np.max([len(a) for a in adj]))
+    """Deprecated: `api.plan_geometry` + `api.schedule_comm` compose the same
+    artifacts without fusing the protocol into the geometry."""
+    _warn_once("build_distributed_plan", "plan_geometry/schedule_comm")
+    geo = api.plan_geometry(
+        x, q, _spec(nparts, method, theta, ncrit, p, sfc_box_inflation))
+    cs = api.schedule_comm(geo, protocol, grain_bytes=grain_bytes,
+                           check_delivery=check_delivery)
     return DistributedPlan(
-        n=n, nparts=nparts, theta=theta, p=p, part=part, owners=owners,
-        boxes=boxes, adj_boxes=adj_boxes, trees=trees, Ms=Ms, lets=lets,
-        receivers=receivers, bytes_matrix=B, schedule_stats=stats,
-        loggp_time=t_model, n_stages=sched.n_stages, adjacency_degree=deg,
-        diameter=graph_diameter(adj),
-        partition_stats=dict(nparts=nparts, method=method),
+        n=geo.n, nparts=geo.nparts, theta=geo.theta, p=geo.p, part=geo.part,
+        owners=geo.owners, boxes=geo.boxes, adj_boxes=geo.adj_boxes,
+        trees=geo.trees, Ms=geo.Ms, lets=geo.lets, receivers=geo.receivers,
+        bytes_matrix=geo.bytes_matrix, schedule_stats=cs.stats,
+        loggp_time=cs.loggp_time, n_stages=cs.n_stages,
+        adjacency_degree=geo.adjacency_degree, diameter=geo.diameter,
+        partition_stats=geo.partition_stats,
     )
 
 
 def execute_distributed_plan(plan: DistributedPlan,
                              use_pallas: bool = False) -> np.ndarray:
     """Kernels + gathers only: no traversal, no list building, no padding."""
-    ops = get_operators(plan.p)
-    phi = np.zeros(plan.n)
-    for j in range(plan.nparts):
-        r = plan.receivers[j]
-        t = r.tree
-        L = m2l_apply(ops, jnp.asarray(plan.Ms[j]), r.local)
-        phi_local = p2p_apply(t, t, r.local, use_pallas=use_pallas)
-        for i, g, inter in r.remote:
-            if inter.n_m2l:
-                L = L + m2l_apply(ops, jnp.asarray(g.M, dtype=L.dtype), inter)
-            if inter.n_p2p:
-                phi_local += p2p_apply(t, g, inter, use_pallas=use_pallas)
-            if inter.n_m2p:
-                phi_local += m2p_apply(t, g.M, inter, p=plan.p)
-        L = downward_pass(t, ops, L, sched=r.sched)
-        phi_local += l2p_pass(t, ops, L, sched=r.sched)
-        phi[plan.owners[j][t.perm]] = phi_local
-    return phi
+    return execute_geometry(plan, use_pallas=use_pallas)
 
 
 def run_distributed_fmm(x, q, nparts: int = 8, method: str = "orb",
@@ -214,14 +121,17 @@ def run_distributed_fmm(x, q, nparts: int = 8, method: str = "orb",
                         check_delivery: bool = True,
                         sfc_box_inflation: float = DEFAULT_SFC_BOX_INFLATION,
                         ) -> DistributedFMM:
-    plan = build_distributed_plan(
-        x, q, nparts=nparts, method=method, protocol=protocol, theta=theta,
-        ncrit=ncrit, p=p, grain_bytes=grain_bytes,
-        check_delivery=check_delivery, sfc_box_inflation=sfc_box_inflation)
-    phi = execute_distributed_plan(plan)
+    """Deprecated: `api.FMMSession.potentials` evaluates the same pipeline
+    with device-view memoization and plan reuse across protocols/timesteps."""
+    _warn_once("run_distributed_fmm", "FMMSession.potentials")
+    geo = api.plan_geometry(
+        x, q, _spec(nparts, method, theta, ncrit, p, sfc_box_inflation))
+    cs = api.schedule_comm(geo, protocol, grain_bytes=grain_bytes,
+                           check_delivery=check_delivery)
+    phi = execute_geometry(geo)
     return DistributedFMM(
-        phi=phi, bytes_matrix=plan.bytes_matrix,
-        schedule_stats=plan.schedule_stats, loggp_time=plan.loggp_time,
-        partition_stats=plan.partition_stats, n_stages=plan.n_stages,
-        adjacency_degree=plan.adjacency_degree, diameter=plan.diameter,
+        phi=phi, bytes_matrix=geo.bytes_matrix, schedule_stats=cs.stats,
+        loggp_time=cs.loggp_time, partition_stats=geo.partition_stats,
+        n_stages=cs.n_stages, adjacency_degree=geo.adjacency_degree,
+        diameter=geo.diameter,
     )

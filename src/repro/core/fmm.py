@@ -91,40 +91,48 @@ def _p2p_vals(xt, xs, qs, mask):
 
 
 # ------------------------------------------------------------- passes ------
+# Every executor takes an optional `asarray` hook (default `jnp.asarray`): a
+# session can pass a memoizing uploader (api.DeviceMemo) so the frozen NumPy
+# index tables are transferred to the device exactly once, keeping plan.py
+# NumPy-only while repeated execution stays kernels-only.
 def upward_pass(tree: Tree, ops: MultipoleOperators,
-                sched: TreeSchedules | None = None) -> jnp.ndarray:
+                sched: TreeSchedules | None = None, asarray=None) -> jnp.ndarray:
     """P2M at leaves, then M2M level-by-level (deepest first). -> (C, nk)."""
     if sched is None:
         sched = build_tree_schedules(tree)
-    x = jnp.asarray(tree.x, jnp.float32)
-    q = jnp.asarray(tree.q, jnp.float32)
-    xi = x[jnp.asarray(sched.leaf_idx)]
-    qi = jnp.where(jnp.asarray(sched.leaf_valid), q[jnp.asarray(sched.leaf_idx)], 0.0)
-    M = _p2m_scatter(ops, qi, xi, jnp.asarray(sched.leaf_centers),
-                     jnp.asarray(sched.leaves), jnp.asarray(sched.leaf_mask),
+    aa = jnp.asarray if asarray is None else asarray
+    x = aa(tree.x, jnp.float32)
+    q = aa(tree.q, jnp.float32)
+    xi = x[aa(sched.leaf_idx)]
+    qi = jnp.where(aa(sched.leaf_valid), q[aa(sched.leaf_idx)], 0.0)
+    M = _p2m_scatter(ops, qi, xi, aa(sched.leaf_centers),
+                     aa(sched.leaves), aa(sched.leaf_mask),
                      n_cells=sched.n_cells)
     for ls in reversed(sched.levels):
-        M = _m2m_scatter(ops, M, M[jnp.asarray(ls.ids)], jnp.asarray(ls.d),
-                         jnp.asarray(ls.parents), jnp.asarray(ls.mask))
+        M = _m2m_scatter(ops, M, M[aa(ls.ids)], aa(ls.d),
+                         aa(ls.parents), aa(ls.mask))
     return M
 
 
 def downward_pass(tree: Tree, ops, L,
-                  sched: TreeSchedules | None = None) -> jnp.ndarray:
+                  sched: TreeSchedules | None = None, asarray=None) -> jnp.ndarray:
     if sched is None:
         sched = build_tree_schedules(tree)
+    aa = jnp.asarray if asarray is None else asarray
     for ls in sched.levels:
-        L = _l2l_scatter(ops, L, L[jnp.asarray(ls.parents)], jnp.asarray(ls.d),
-                         jnp.asarray(ls.ids), jnp.asarray(ls.mask))
+        L = _l2l_scatter(ops, L, L[aa(ls.parents)], aa(ls.d),
+                         aa(ls.ids), aa(ls.mask))
     return L
 
 
-def l2p_pass(tree: Tree, ops, L, sched: TreeSchedules | None = None) -> np.ndarray:
+def l2p_pass(tree: Tree, ops, L, sched: TreeSchedules | None = None,
+             asarray=None) -> np.ndarray:
     if sched is None:
         sched = build_tree_schedules(tree)
-    y = jnp.asarray(tree.x, jnp.float32)[jnp.asarray(sched.leaf_idx)]
-    vals = _l2p_vals(ops, L[jnp.asarray(sched.leaves)], y,
-                     jnp.asarray(sched.leaf_centers), jnp.asarray(sched.leaf_mask))
+    aa = jnp.asarray if asarray is None else asarray
+    y = aa(tree.x, jnp.float32)[aa(sched.leaf_idx)]
+    vals = _l2p_vals(ops, L[aa(sched.leaves)], y,
+                     aa(sched.leaf_centers), aa(sched.leaf_mask))
     phi = np.zeros(len(tree.x))
     np.add.at(phi, sched.leaf_idx.ravel(),
               np.where(sched.leaf_valid.ravel(),
@@ -132,13 +140,14 @@ def l2p_pass(tree: Tree, ops, L, sched: TreeSchedules | None = None) -> np.ndarr
     return phi
 
 
-def m2l_apply(ops, M, plan: InteractionPlan) -> jnp.ndarray:
+def m2l_apply(ops, M, plan: InteractionPlan, asarray=None) -> jnp.ndarray:
     """Execute the plan's padded M2L list against multipoles M."""
-    M = jnp.asarray(M, jnp.float32)
+    aa = jnp.asarray if asarray is None else asarray
+    M = aa(M, jnp.float32)
     if plan.n_m2l == 0:
         return jnp.zeros((plan.n_tgt_cells, ops.nk), jnp.float32)
-    return _m2l_scatter(ops, M[jnp.asarray(plan.m2l_b)], jnp.asarray(plan.m2l_d),
-                        jnp.asarray(plan.m2l_a), jnp.asarray(plan.m2l_mask),
+    return _m2l_scatter(ops, M[aa(plan.m2l_b)], aa(plan.m2l_d),
+                        aa(plan.m2l_a), aa(plan.m2l_mask),
                         n_cells=plan.n_tgt_cells)
 
 
@@ -159,25 +168,26 @@ def build_interaction_subset(tgt_tree, src_tree, m2l_pairs=None,
 
 
 def p2p_apply(tgt_tree, src_tree, plan: InteractionPlan,
-              use_pallas: bool = False) -> np.ndarray:
+              use_pallas: bool = False, asarray=None) -> np.ndarray:
     """Execute the plan's bucketed P2P blocks.  Each block's source width is
     sized to its own leaves, so a grafted LET's one big boundary leaf no
     longer inflates every pair's padding."""
     phi = np.zeros(plan.n_tgt_bodies)
     if plan.n_p2p == 0:
         return phi
-    xt_all = jnp.asarray(tgt_tree.x, jnp.float32)
-    xs_all = jnp.asarray(src_tree.x, jnp.float32)
-    qs_all = jnp.asarray(src_tree.q, jnp.float32)
+    aa = jnp.asarray if asarray is None else asarray
+    xt_all = aa(tgt_tree.x, jnp.float32)
+    xs_all = aa(src_tree.x, jnp.float32)
+    qs_all = aa(src_tree.q, jnp.float32)
     for blk in plan.p2p_blocks:
-        xt = xt_all[jnp.asarray(blk.t_idx)]
-        xs = xs_all[jnp.asarray(blk.s_idx)]
-        qs = jnp.where(jnp.asarray(blk.s_valid), qs_all[jnp.asarray(blk.s_idx)], 0.0)
+        xt = xt_all[aa(blk.t_idx)]
+        xs = xs_all[aa(blk.s_idx)]
+        qs = jnp.where(aa(blk.s_valid), qs_all[aa(blk.s_idx)], 0.0)
         if use_pallas:
             from repro.kernels.ops import p2p_blocked
             vals = np.asarray(p2p_blocked(qs, xs, xt)) * blk.mask[:, None]
         else:
-            vals = np.asarray(_p2p_vals(xt, xs, qs, jnp.asarray(blk.mask)))
+            vals = np.asarray(_p2p_vals(xt, xs, qs, aa(blk.mask)))
         np.add.at(phi, blk.t_idx.ravel(),
                   np.where(blk.t_valid.ravel(),
                            vals.astype(np.float64).ravel(), 0.0))
@@ -189,17 +199,19 @@ def p2p_pass(tgt_tree: Tree, src_tree, pairs, use_pallas: bool = False) -> np.nd
     return p2p_apply(tgt_tree, src_tree, plan, use_pallas=use_pallas)
 
 
-def m2p_apply(tgt_tree, src_M, plan: InteractionPlan, p: int = 4) -> np.ndarray:
+def m2p_apply(tgt_tree, src_M, plan: InteractionPlan, p: int = 4,
+              asarray=None) -> np.ndarray:
     """Execute the plan's padded M2P fallback list (truncated remote cells
     that fail the MAC against a large local leaf)."""
     ops = get_operators(p)
     phi = np.zeros(plan.n_tgt_bodies)
     if plan.n_m2p == 0:
         return phi
-    y = jnp.asarray(tgt_tree.x, jnp.float32)[jnp.asarray(plan.m2p_t_idx)]
-    M = jnp.asarray(src_M, jnp.float32)[jnp.asarray(plan.m2p_b)]
-    vals = np.asarray(_m2p_vals(ops, M, y, jnp.asarray(plan.m2p_centers),
-                                jnp.asarray(plan.m2p_mask)))
+    aa = jnp.asarray if asarray is None else asarray
+    y = aa(tgt_tree.x, jnp.float32)[aa(plan.m2p_t_idx)]
+    M = aa(src_M, jnp.float32)[aa(plan.m2p_b)]
+    vals = np.asarray(_m2p_vals(ops, M, y, aa(plan.m2p_centers),
+                                aa(plan.m2p_mask)))
     np.add.at(phi, plan.m2p_t_idx.ravel(),
               np.where(plan.m2p_t_valid.ravel(),
                        vals.astype(np.float64).ravel(), 0.0))
@@ -216,23 +228,27 @@ def m2p_pass(tgt_tree: Tree, src_M, src_centers, pairs, p: int = 4) -> np.ndarra
 
 # ------------------------------------------------------- plan execution ----
 def execute_fmm_plan(plan: FMMPlan, use_pallas: bool = False,
-                     M=None) -> np.ndarray:
+                     M=None, asarray=None) -> np.ndarray:
     """Evaluate a prebuilt FMMPlan: kernels + gathers only, no host-side list
     construction or padding.  `M` overrides the source multipoles (grafted
-    LETs ship theirs; locally they are rebuilt from the plan's schedules)."""
+    LETs ship theirs; locally they are rebuilt from the plan's schedules).
+    `asarray` optionally memoizes host->device uploads (api.DeviceMemo)."""
     ops = get_operators(plan.p)
     inter = plan.interactions
     if M is None:
         if plan.src_sched is not None:
-            M = upward_pass(plan.src_tree, ops, sched=plan.src_sched)
+            M = upward_pass(plan.src_tree, ops, sched=plan.src_sched,
+                            asarray=asarray)
         else:
             M = plan.src_tree.M           # grafted LET: shipped multipoles
-    L = m2l_apply(ops, M, inter)
-    L = downward_pass(plan.tgt_tree, ops, L, sched=plan.tgt_sched)
-    phi = l2p_pass(plan.tgt_tree, ops, L, sched=plan.tgt_sched)
-    phi += p2p_apply(plan.tgt_tree, plan.src_tree, inter, use_pallas=use_pallas)
+    L = m2l_apply(ops, M, inter, asarray=asarray)
+    L = downward_pass(plan.tgt_tree, ops, L, sched=plan.tgt_sched,
+                      asarray=asarray)
+    phi = l2p_pass(plan.tgt_tree, ops, L, sched=plan.tgt_sched, asarray=asarray)
+    phi += p2p_apply(plan.tgt_tree, plan.src_tree, inter,
+                     use_pallas=use_pallas, asarray=asarray)
     if inter.n_m2p:
-        phi += m2p_apply(plan.tgt_tree, M, inter, p=plan.p)
+        phi += m2p_apply(plan.tgt_tree, M, inter, p=plan.p, asarray=asarray)
     return phi
 
 

@@ -26,11 +26,20 @@ def nb_bound(D: int = 3) -> int:
 
 def adjacency_from_boxes(boxes: np.ndarray, eps: float = 1e-9) -> list[list[int]]:
     """Lemma 1: P' is adjacent to P iff their boxes overlap within eps in
-    every dimension (face/edge/vertex sharing).  boxes: (P, 2, 3)."""
+    every dimension (face/edge/vertex sharing).  boxes: (P, 2, 3).
+
+    A partition with no bodies carries the empty-box sentinel (lo > hi, i.e.
+    lo=+inf / hi=-inf) and is adjacent to nothing — it neither sends nor
+    receives LET payloads, so routing must never relay through it."""
     P = len(boxes)
     adj = [[] for _ in range(P)]
+    empty = np.any(boxes[:, 1] < boxes[:, 0], axis=1)
     for i in range(P):
+        if empty[i]:
+            continue
         for j in range(i + 1, P):
+            if empty[j]:
+                continue
             lo = np.maximum(boxes[i, 0], boxes[j, 0])
             hi = np.minimum(boxes[i, 1], boxes[j, 1])
             if np.all(hi - lo >= -eps):

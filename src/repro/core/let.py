@@ -27,14 +27,14 @@ tests) because a FIFO deque already expands cells in level order.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 import numpy as np
 
 from repro.core.tree import Tree, _segmented_arange
 
-__all__ = ["LETData", "extract_let", "extract_lets", "graft", "let_nbytes",
-           "CELL_BYTES", "BODY_BYTES"]
+__all__ = ["LETData", "extract_let", "extract_lets", "graft", "refresh_let",
+           "let_nbytes", "CELL_BYTES", "BODY_BYTES"]
 
 # wire format: center(3f8) + radius(f8) + M(20f8) + 4 structure int32s
 CELL_BYTES = (3 + 1 + 20) * 8 + 16
@@ -54,6 +54,14 @@ class LETData:
     truncated: np.ndarray    # (S,) bool — multipole-sufficient leaf
     x: np.ndarray            # (B, 3) shipped bodies
     q: np.ndarray            # (B,)
+    # refresh bookkeeping (NOT part of the wire format; nbytes is unchanged):
+    # sender-side indices that let `refresh_let` rebind the numeric payload to
+    # updated coordinates/charges, and the minimum truncation-criterion margin
+    # used by api.FMMSession.step's MAC-slack revalidation.
+    cell_src: np.ndarray | None = None   # (S,) sender-tree cell ids
+    body_src: np.ndarray | None = None   # (B,) sender-tree sorted body ids
+    trunc_margin: float = float("inf")   # min over truncated cells of
+                                         # theta * dist(center, box) - 2 R
 
     @property
     def n_cells(self) -> int:
@@ -105,6 +113,7 @@ def extract_lets(tree: Tree, M: np.ndarray, boxes_lo, boxes_hi,
 
     rec_ch = []          # per-generation record arrays (row order = BFS order)
     body_g_ch, body_idx_ch = [], []
+    trunc_margin = np.full(G, np.inf)
     while len(f_g):
         c = f_c
         dd = np.maximum(np.maximum(lo[f_g] - center[c], center[c] - hi[f_g]), 0.0)
@@ -112,6 +121,11 @@ def extract_lets(tree: Tree, M: np.ndarray, boxes_lo, boxes_hi,
         trunc = (2.0 * radius[c] < theta * dist) & (c != 0)
         leaf = ~trunc & (t_nc[c] == 0)
         expand = ~trunc & ~leaf
+
+        ti = np.nonzero(trunc)[0]
+        if len(ti):
+            np.minimum.at(trunc_margin, f_g[ti],
+                          theta * dist[ti] - 2.0 * radius[c[ti]])
 
         bstart = np.zeros(len(f_g), dtype=np.int64)
         nbody = np.zeros(len(f_g), dtype=np.int64)
@@ -174,6 +188,8 @@ def extract_lets(tree: Tree, M: np.ndarray, boxes_lo, boxes_hi,
             truncated=trunc_all[sel],
             x=(tree.x[bsel].copy() if len(bsel) else np.zeros((0, 3))),
             q=(tree.q[bsel].copy() if len(bsel) else np.zeros((0,))),
+            cell_src=src, body_src=bsel,
+            trunc_margin=float(trunc_margin[b]),
         ))
     return lets
 
@@ -187,6 +203,22 @@ def extract_let(tree: Tree, M: np.ndarray, box_lo, box_hi,
 
 def let_nbytes(let: LETData) -> int:
     return let.nbytes
+
+
+def refresh_let(let: LETData, tree: Tree, M: np.ndarray) -> LETData:
+    """Rebind a LET's numeric payload (multipoles, shipped bodies) to the
+    sender's updated coordinates/charges while keeping the pruned *structure*
+    byte-for-byte — valid as long as the sender's drift stays within the MAC
+    slack budget (api.FMMSession.step).  The wire size is unchanged, so the
+    bytes matrix and every protocol schedule stay valid too."""
+    if let.cell_src is None or let.body_src is None:
+        raise ValueError("LET lacks refresh bookkeeping "
+                         "(extracted by the reference path?)")
+    M = np.asarray(M)
+    return replace(
+        let, M=M[let.cell_src].copy(),
+        x=(tree.x[let.body_src].copy() if len(let.body_src) else let.x),
+        q=(tree.q[let.body_src].copy() if len(let.body_src) else let.q))
 
 
 class _GraftedTree:

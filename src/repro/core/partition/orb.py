@@ -52,6 +52,11 @@ def orb_partition(x: np.ndarray, nparts: int, regions: bool = False):
     rboxes = np.zeros((nparts, 2, 3))
 
     def recurse(idx: np.ndarray, p0: int, np_: int, rlo, rhi):
+        if len(idx) == 0:           # more parts than points: this whole
+            for p in range(p0, p0 + np_):   # subtree gets empty-box sentinels
+                boxes[p, 0], boxes[p, 1] = np.inf, -np.inf
+                rboxes[p, 0], rboxes[p, 1] = np.inf, -np.inf
+            return
         if np_ == 1:
             pts = x[idx]
             part[idx] = p0

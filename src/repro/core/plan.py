@@ -1,24 +1,39 @@
 """Interaction plans: the plan/execute split for the FMM host pipeline.
 
-Architecture: plan vs execute
------------------------------
-Every FMM evaluation decomposes into two very different kinds of work:
+Architecture: three layers over plan vs execute
+-----------------------------------------------
+Every FMM evaluation decomposes into two very different kinds of work —
+**plan construction** (this module, pure NumPy: dual-tree traversal,
+pair-list padding and bucketing, leaf body-gather index tables, per-level
+upward/downward schedules) and **plan execution** (`fmm.execute_fmm_plan`
+and the `*_pass` functions, JAX kernels gathering through the precomputed
+index tables with no list construction and no padding work).
 
-  1. **Plan construction** (this module, pure NumPy): dual-tree traversal,
-     pair-list padding and bucketing, leaf body-gather index tables, and the
-     per-level upward/downward schedules.  These depend only on *geometry*
-     (tree shapes, theta) — not on charges — and are exactly the structures
-     Kailasa et al. precompute once as "communication metadata" before any
+The distributed pipeline exposes that split as three composable layers
+(repro.core.api), one per independent axis of the paper:
+
+  1. `plan_geometry(x, q, PartitionSpec) -> GeometryPlan` — partitioning,
+     completely local trees, batched sender-side LET extraction and every
+     receiver's frozen `InteractionPlan`s, built ONCE with no protocol
+     argument.  This is the expensive host-side geometry work, and exactly
+     the "communication metadata" Kailasa et al. precompute before any
      evaluation.
-  2. **Plan execution** (`fmm.execute_fmm_plan` and the `*_pass` functions,
-     JAX): the numeric P2M/M2M/M2L/L2L/L2P/P2P/M2P kernels, which gather
-     through the plan's precomputed index tables with *no list construction
-     and no padding work*.
+  2. `schedule_comm(geometry, protocol, ...) -> CommSchedule` — a cheap pure
+     function over the frozen bytes matrix and Lemma-1 adjacency boxes
+     (protocols.py), so sweeping all four exchange protocols reuses one
+     `GeometryPlan` with zero re-extraction.
+  3. `FMMSession` — memoized device-resident views of the frozen NumPy
+     index tables (each table uploads once; later executions are
+     kernels-only), protocol sweeps from a single evaluation, and
+     `.step(new_x)` timestep revalidation through MAC slack margins that
+     rebuilds only invalidated partitions.
 
 A plan is built once and executed many times — time-stepped N-body where
 geometry changes slowly, or protocol sweeps over the same partitioning —
 which is what makes the host side disappear from the hot path.  All plan
-dataclasses are frozen: a plan is immutable geometry metadata.
+dataclasses are frozen: a plan is immutable geometry metadata.  This module
+stays NumPy-only; device residency is the session's concern (api.DeviceMemo
+threads through the executors' `asarray` hook).
 
 Key structures:
 

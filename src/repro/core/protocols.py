@@ -15,6 +15,12 @@ deliver to partition j:
 Every schedule is *executed* by a store-and-forward simulator so tests can
 assert identical delivery, and costed with a LogGP model including the
 eager->rendezvous protocol cliff the paper tunes around (Fig 6).
+
+This module is the pure *transport* layer of the three-layer API
+(repro.core.api): `make_schedule` / `loggp_time` are cheap pure functions
+over a frozen bytes matrix B and the Lemma-1 adjacency boxes, so
+`api.schedule_comm` can sweep all four protocols against one `GeometryPlan`
+with zero geometry work.
 """
 from __future__ import annotations
 
@@ -201,11 +207,16 @@ def schedule_stats(sched: Schedule) -> dict:
                 max_msgs_per_dst_stage=max_inbox)
 
 
-def loggp_time(sched: Schedule, prm: LogGPParams = LogGPParams(),
+def loggp_time(sched: Schedule, prm: LogGPParams | None = None,
                grain_bytes: int | None = None) -> float:
     """Per-stage critical path: L + max over processes of (send overhead +
     serialization), with the eager/rendezvous cliff; optional grain size
-    splits messages (granularity spectrum, Fig 6)."""
+    splits messages (granularity spectrum, Fig 6).
+
+    `prm=None` constructs fresh `LogGPParams` per call — the default is never
+    a shared instance, so callers mutating their params cannot leak state
+    into other calls."""
+    prm = LogGPParams() if prm is None else prm
     total = 0.0
     for stage in sched.stages:
         per_proc: dict[int, float] = {}

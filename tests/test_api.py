@@ -1,0 +1,279 @@
+"""Three-layer API (repro.core.api): GeometryPlan -> CommSchedule ->
+FMMSession.  Golden equivalence of the legacy shims, single-extraction
+protocol sweeps, device-view memoization, MAC-slack timestep revalidation,
+and the empty-partition / LogGP-params satellite regressions."""
+import warnings
+
+import numpy as np
+import pytest
+
+import repro.core.api as api
+import repro.core.distributed_fmm as dfmm
+from repro.core import protocols as proto
+from repro.core.api import (FMMSession, PartitionSpec, plan_geometry,
+                            schedule_comm)
+from repro.core.distributed_fmm import (build_distributed_plan,
+                                        execute_distributed_plan,
+                                        run_distributed_fmm)
+from repro.core.distributions import make_distribution
+from repro.core.fmm import direct_potential
+from repro.core.hsdx import adjacency_from_boxes
+
+
+def _problem(n=1500, seed=5, qseed=6):
+    x = make_distribution("sphere", n, seed=seed)
+    q = np.random.default_rng(qseed).uniform(-1, 1, n)
+    return x, q
+
+
+# ------------------------------------------------- layering / plan reuse ---
+def test_sweep_bitwise_identical_to_independent_runs():
+    """One GeometryPlan serving all four protocols must reproduce four
+    independent legacy runs bit for bit — potential AND accounting."""
+    x, q = _problem()
+    sess = FMMSession.from_points(x, q, PartitionSpec(nparts=5, ncrit=48))
+    sweep = sess.sweep()
+    assert set(sweep) == set(proto.PROTOCOLS)
+    for name in proto.PROTOCOLS:
+        res = run_distributed_fmm(x, q, nparts=5, method="orb",
+                                  protocol=name, theta=0.5, ncrit=48)
+        assert np.array_equal(sweep[name].phi, res.phi), name
+        assert np.array_equal(sweep[name].bytes_matrix, res.bytes_matrix)
+        assert sweep[name].schedule_stats == res.schedule_stats, name
+        assert sweep[name].loggp_time == res.loggp_time
+        assert sweep[name].n_stages == res.n_stages
+
+
+def test_sweep_extracts_lets_exactly_once_per_sender(monkeypatch):
+    """The acceptance criterion: sweeping all four protocols performs exactly
+    one (batched) extract_lets call per sender — zero re-extraction."""
+    x, q = _problem(n=1200)
+    nparts = 4
+    calls = []
+    real = api.extract_lets
+    monkeypatch.setattr(api, "extract_lets",
+                        lambda *a, **k: calls.append(a) or real(*a, **k))
+    sess = FMMSession.from_points(x, q, PartitionSpec(nparts=nparts, ncrit=48))
+    sess.sweep()
+    assert len(calls) == nparts
+    # ... and each call batched all P-1 remote boxes of its sender
+    assert all(len(a[2]) == nparts - 1 for a in calls)
+
+
+def test_schedule_comm_pure_over_frozen_geometry():
+    x, q = _problem(n=1000)
+    geo = plan_geometry(x, q, PartitionSpec(nparts=4, ncrit=48))
+    B = geo.bytes_matrix.copy()
+    for name in proto.PROTOCOLS:
+        cs = schedule_comm(geo, name)
+        assert cs.n_stages >= 1
+        delivered = proto.simulate_delivery(cs.schedule)
+        assert sum(delivered.values()) == B[B > 0].sum()
+    assert np.array_equal(geo.bytes_matrix, B)   # geometry untouched
+
+
+# ------------------------------------------------------- legacy shims ------
+def test_legacy_shims_byte_identical_to_layered_path():
+    x, q = _problem(n=1200)
+    spec = PartitionSpec(nparts=4, ncrit=48)
+    sess = FMMSession.from_points(x, q, spec)
+    res_new = sess.potentials("hsdx")
+
+    res_old = run_distributed_fmm(x, q, nparts=4, method="orb",
+                                  protocol="hsdx", theta=0.5, ncrit=48)
+    assert np.array_equal(res_old.phi, res_new.phi)
+    assert np.array_equal(res_old.bytes_matrix, res_new.bytes_matrix)
+    assert res_old.schedule_stats == res_new.schedule_stats
+    assert res_old.loggp_time == res_new.loggp_time
+
+    plan = build_distributed_plan(x, q, nparts=4, method="orb",
+                                  protocol="hsdx", theta=0.5, ncrit=48)
+    assert np.array_equal(execute_distributed_plan(plan), res_new.phi)
+    assert np.array_equal(plan.bytes_matrix, res_new.bytes_matrix)
+
+
+def test_legacy_shims_warn_exactly_once():
+    """Runs clean even under `-W error::DeprecationWarning` (CI exercises
+    that filter): the shims warn once per process, and this test scopes the
+    filter so the warning is recorded, not raised."""
+    x, q = _problem(n=400)
+    dfmm._DEPRECATION_WARNED.clear()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        run_distributed_fmm(x, q, nparts=2, ncrit=48)
+        run_distributed_fmm(x, q, nparts=2, ncrit=48)
+        build_distributed_plan(x, q, nparts=2, ncrit=48)
+        build_distributed_plan(x, q, nparts=2, ncrit=48)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)
+           and "repro.core.api" in str(w.message)]
+    assert len(dep) == 2          # one per entry point, despite two calls each
+    names = sorted(str(w.message).split(" ")[0] for w in dep)
+    assert names == ["build_distributed_plan", "run_distributed_fmm"]
+
+
+# --------------------------------------------------- device-view memo ------
+def test_repeat_execution_zero_host_device_transfers():
+    """Acceptance criterion: after the first execution, every frozen plan
+    table is served from the memoized device view — zero new uploads."""
+    x, q = _problem(n=1000)
+    sess = FMMSession.from_points(x, q, PartitionSpec(nparts=4, ncrit=48))
+    phi1 = sess.evaluate()
+    assert sess.memo.misses > 0           # first run uploaded the tables
+    misses0 = sess.memo.misses
+    phi2 = sess.evaluate()
+    assert sess.memo.misses == misses0    # second run: zero transfers
+    assert sess.memo.hits > 0
+    assert np.array_equal(phi1, phi2)
+    # the cached potential is shared across SessionResults: read-only
+    assert not phi1.flags.writeable
+    with pytest.raises(ValueError):
+        phi1[0] = 0.0
+
+
+def test_device_memo_evicts_replaced_arrays_across_steps():
+    """Long-running sessions must not leak device views: arrays replaced by
+    a step (positions, multipoles, LET payloads) self-evict from the memo
+    once the old geometry is dropped; shared index tables stay cached."""
+    import gc
+    x, q = _problem(n=1000)
+    sess = FMMSession.from_points(x, q, PartitionSpec(nparts=4, ncrit=48))
+    sess.evaluate()
+    eps = float(sess.geometry.slack.min())
+    rng = np.random.default_rng(1)
+    sizes = []
+    for _ in range(3):
+        sess.step(sess.geometry.x0
+                  + rng.uniform(-eps / 8, eps / 8, size=x.shape))
+        sess.evaluate()
+        gc.collect()
+        sizes.append(len(sess.memo))
+    assert sizes[1] == sizes[2]           # steady state, not linear growth
+
+
+# ----------------------------------------------------------- stepping ------
+def test_step_unmoved_is_full_cache_hit():
+    x, q = _problem(n=1200)
+    sess = FMMSession.from_points(x, q, PartitionSpec(nparts=4, ncrit=48))
+    phi1 = sess.potentials("hsdx").phi
+    geo0 = sess.geometry
+    rep = sess.step(x.copy())
+    assert rep.cache_hit and rep.rebuilt == () and rep.refreshed == ()
+    assert sess.geometry is geo0          # no tree rebuilds, no new version
+    assert np.array_equal(sess.evaluate(), phi1)   # bitwise re-execution
+
+
+def test_step_within_slack_refreshes_without_rebuild():
+    x, q = _problem(n=1500)
+    sess = FMMSession.from_points(x, q, PartitionSpec(nparts=4, ncrit=48))
+    sess.potentials("hsdx")
+    geo0 = sess.geometry
+    eps = float(geo0.slack.min())
+    assert eps > 0
+    rng = np.random.default_rng(0)
+    x1 = x + rng.uniform(-eps / 4, eps / 4, size=x.shape)   # |dx| < slack
+    rep = sess.step(x1)
+    assert rep.rebuilt == ()
+    assert len(rep.refreshed) == 4
+    # structure is shared: same index arrays, same interaction plans
+    for j in range(4):
+        assert sess.geometry.trees[j].parent is geo0.trees[j].parent
+        assert sess.geometry.receivers[j].local is geo0.receivers[j].local
+    phi = sess.potentials("hsdx").phi
+    ref = direct_potential(x1, q)
+    assert np.linalg.norm(phi - ref) / np.linalg.norm(ref) < 3e-3
+
+
+def test_step_rebuilds_only_invalidated_partitions():
+    x, q = _problem(n=1500)
+    sess = FMMSession.from_points(x, q, PartitionSpec(nparts=4, ncrit=48))
+    sess.potentials("hsdx")
+    geo0 = sess.geometry
+    mover = 2
+    x1 = x.copy()
+    x1[geo0.owners[mover]] += np.array([0.15, -0.1, 0.2])   # >> slack
+    rep = sess.step(x1)
+    assert rep.rebuilt == (mover,)
+    assert rep.refreshed == ()
+    for j in range(4):                    # untouched partitions reused as-is
+        if j != mover:
+            assert sess.geometry.trees[j] is geo0.trees[j]
+    phi = sess.potentials("hsdx").phi
+    ref = direct_potential(x1, q)
+    assert np.linalg.norm(phi - ref) / np.linalg.norm(ref) < 3e-3
+
+
+def test_step_rejects_mismatched_shapes():
+    x, q = _problem(n=600)
+    sess = FMMSession.from_points(x, q, PartitionSpec(nparts=2, ncrit=48))
+    with pytest.raises(ValueError, match="positions"):
+        sess.step(x[:100])
+    with pytest.raises(ValueError, match="charges"):
+        sess.step(x.copy(), q[:100])
+
+
+def test_step_charge_update_refreshes_multipoles():
+    x, q = _problem(n=1000)
+    sess = FMMSession.from_points(x, q, PartitionSpec(nparts=4, ncrit=48))
+    sess.potentials("hsdx")
+    q2 = q * 1.7
+    rep = sess.step(x.copy(), q2)
+    assert rep.rebuilt == () and len(rep.refreshed) == 4
+    phi = sess.potentials("hsdx").phi
+    ref = direct_potential(x, q2)
+    assert np.linalg.norm(phi - ref) / np.linalg.norm(ref) < 3e-3
+
+
+# ------------------------------------------------- satellite regressions ---
+def test_empty_partitions_use_sentinel_and_stay_correct():
+    """A partition with no bodies must not contribute a [0,0]-at-origin box
+    to the Lemma-1 adjacency graph or receive/send LETs."""
+    pts = np.array([[.1, .1, .1], [.8, .2, .3], [.3, .9, .5],
+                    [.6, .6, .9], [.9, .9, .1]])
+    x = np.repeat(pts, 60, axis=0)        # 5 sites -> >= 3 of 8 parts empty
+    q = np.random.default_rng(1).uniform(-1, 1, len(x))
+    geo = plan_geometry(x, q, PartitionSpec(nparts=8, method="morton",
+                                            ncrit=64))
+    empty = [p for p in range(8) if len(geo.owners[p]) == 0]
+    assert len(empty) >= 3
+    for p in empty:
+        assert np.all(geo.boxes[p, 1] < geo.boxes[p, 0])       # sentinel
+        assert geo.trees[p] is None and geo.receivers[p] is None
+        assert geo.bytes_matrix[p].sum() == 0
+        assert geo.bytes_matrix[:, p].sum() == 0
+    adj = adjacency_from_boxes(geo.adj_boxes)
+    assert all(len(adj[p]) == 0 for p in empty)                # isolated
+    assert all(p not in a for p in empty for a in adj)
+    sess = FMMSession(geo)
+    phi = sess.potentials("hsdx").phi
+    ref = direct_potential(x, q)
+    assert np.linalg.norm(phi - ref) / np.linalg.norm(ref) < 3e-3
+
+
+@pytest.mark.parametrize("n,nparts", [(3, 5), (1, 4), (2, 8)])
+def test_orb_more_parts_than_points_gets_sentinel(n, nparts):
+    """Empty branches must carry sentinels even when they reach *internal*
+    recursion nodes (e.g. 1 point split 4 ways routes an empty half into a
+    2-part subtree)."""
+    from repro.core.partition.orb import orb_partition
+    x = np.random.default_rng(0).uniform(size=(n, 3))
+    part, boxes = orb_partition(x, nparts)
+    assert len(np.unique(part)) == n
+    empty = [p for p in range(nparts) if (part == p).sum() == 0]
+    assert len(empty) == nparts - n
+    for p in empty:
+        assert np.all(boxes[p, 1] < boxes[p, 0])
+
+
+def test_loggp_params_default_not_shared():
+    """protocols.loggp_time must construct fresh LogGPParams per call —
+    mutating a caller-owned instance cannot leak into the default path."""
+    import inspect
+    assert inspect.signature(proto.loggp_time).parameters["prm"].default is None
+    B = np.zeros((2, 2), dtype=np.int64)
+    B[0, 1] = 64 * 1024
+    s = proto.make_schedule("alltoallv", B)
+    base = proto.loggp_time(s)
+    prm = proto.LogGPParams()
+    prm.o *= 100.0
+    assert proto.loggp_time(s, prm=prm) > base
+    assert proto.loggp_time(s) == base    # default unaffected by the mutation
