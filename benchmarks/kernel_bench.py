@@ -1,8 +1,16 @@
 """Pallas-kernel parity microbench: wall time of the interpret-mode kernel
 vs the jnp oracle on CPU (TPU timings require hardware; interpret mode
-validates numerics + BlockSpec indexing).  derived = max |err| vs oracle."""
+validates numerics + BlockSpec indexing).  derived = max |err| vs oracle.
+
+Also sweeps the engine execution tier: per-width-class bucketed P2P (the
+engine's Pallas route vs the jnp reference route, reporting per-bucket
+speedup — >1x only on real device backends; interpret mode runs the kernel
+as traced Python) and full engine-vs-reference geometry evaluation.
+Environment knobs: ENGINE_BENCH_N (bodies, default 1500), ENGINE_BENCH_PARTS
+(default 4)."""
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -50,4 +58,58 @@ def run():
     y1, _ = ops.rwkv6_wkv(r, k, v, w, u, s0)
     y2, _ = ref.wkv_ref(r, k, v, w, u, s0)
     rows.append(("kernel_rwkv6_wkv", us, f"max_err={float(jnp.max(jnp.abs(y1-y2))):.2e}"))
+    rows.extend(_bucketed_p2p_rows(rng))
+    rows.extend(_engine_rows())
     return rows
+
+
+def _bucketed_p2p_rows(rng):
+    """Engine P2P bucket shapes: Pallas (autotuned block) vs jnp reference,
+    per source-width class — the per-bucket speedup the engine dispatch
+    trades on (expect < 1x under CPU interpret mode)."""
+    from repro.core.fmm import _p2p_vals
+    rows = []
+    for P, S, T in ((16, 8, 64), (8, 64, 64), (4, 256, 64)):
+        q = jnp.asarray(rng.uniform(-1, 1, (P, S)), jnp.float32)
+        xs = jnp.asarray(rng.uniform(-1, 1, (P, S, 3)), jnp.float32)
+        xt = jnp.asarray(rng.uniform(-1, 1, (P, T, 3)), jnp.float32)
+        mask = jnp.ones((P,), jnp.float32)
+        us_pl = _time(lambda a, b, c: ops.p2p_auto(a, b, c), q, xs, xt)
+        us_ref = _time(lambda a, b, c: _p2p_vals(c, b, a, mask), q, xs, xt)
+        err = float(jnp.max(jnp.abs(ops.p2p_auto(q, xs, xt)
+                                    - _p2p_vals(xt, xs, q, mask))))
+        rows.append((f"p2p_bucket_S{S}_pairs{P}", us_pl,
+                     f"jnp_us={us_ref:.1f} speedup={us_ref / us_pl:.2f}x "
+                     f"max_err={err:.2e}"))
+    return rows
+
+
+def _engine_rows():
+    """Full engine-vs-reference sweep on one geometry (jnp engine path on
+    CPU; the Pallas route needs hardware to win)."""
+    from repro.core.api import DeviceMemo, PartitionSpec, execute_geometry, \
+        plan_geometry
+    from repro.core.distributions import make_distribution
+    from repro.core.engine import DeviceEngine
+    n = int(os.environ.get("ENGINE_BENCH_N", "1500"))
+    nparts = int(os.environ.get("ENGINE_BENCH_PARTS", "4"))
+    x = make_distribution("sphere", n, seed=5)
+    q = np.random.default_rng(6).uniform(-1, 1, n)
+    geo = plan_geometry(x, q, PartitionSpec(nparts=nparts, ncrit=48))
+    memo = DeviceMemo()
+    eng = DeviceEngine(geo, use_kernels=False)
+    phi_ref = execute_geometry(geo, asarray=memo)    # warm both paths
+    phi_eng = eng.evaluate()
+    t0 = time.time()
+    reps = 3
+    for _ in range(reps):
+        execute_geometry(geo, asarray=memo)
+    us_ref = (time.time() - t0) / reps * 1e6
+    t0 = time.time()
+    for _ in range(reps):
+        eng.evaluate()
+    us_eng = (time.time() - t0) / reps * 1e6
+    err = float(np.max(np.abs(phi_ref - phi_eng)))
+    return [(f"engine_vs_reference_n{n}_p{nparts}", us_eng,
+             f"ref_us={us_ref:.1f} speedup={us_ref / us_eng:.2f}x "
+             f"max_err={err:.2e}")]

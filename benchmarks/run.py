@@ -1,4 +1,9 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+#
+# Usage:  python benchmarks/run.py [filter ...]
+# With no arguments every module runs; otherwise only modules whose label
+# contains one of the (case-insensitive) filter substrings run — e.g.
+# ``python benchmarks/run.py kernel`` runs just the kernel/engine sweep.
 import sys
 import traceback
 
@@ -13,15 +18,22 @@ MODULES = [
     ("table3_hsdx (Table 3)", table3_hsdx),
     ("fig7_protocols (Fig 7)", fig7_protocols),
     ("fig8_weak (Fig 8)", fig8_weak),
-    ("kernel_bench (P2P/attn/WKV)", kernel_bench),
+    ("kernel_bench (bucketed P2P/attn/WKV + engine sweep)", kernel_bench),
     ("roofline_table (§Roofline)", roofline_table),
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    filters = [a.lower() for a in (sys.argv[1:] if argv is None else argv)]
+    selected = [(label, mod) for label, mod in MODULES
+                if not filters or any(f in label.lower() for f in filters)]
+    if not selected:
+        print(f"no benchmark matches {filters}; "
+              f"labels: {[l for l, _ in MODULES]}", file=sys.stderr)
+        sys.exit(2)
     print("name,us_per_call,derived")
     failures = 0
-    for label, mod in MODULES:
+    for label, mod in selected:
         try:
             for name, us, derived in mod.run():
                 print(f"{name},{us:.1f},{derived}", flush=True)

@@ -22,6 +22,11 @@ facade keeps them composable instead of entangled:
      from that one evaluation, and `.step(new_x)` revalidates the cached
      plan through MAC slack margins and rebuilds only invalidated
      partitions (time-stepped N-body with slowly drifting geometry).
+     Evaluation dispatches to the batched device engine
+     (repro.core.engine.DeviceEngine — one launch per FMM phase for the
+     whole geometry, Pallas-bucketed P2P, multipoles device-resident across
+     steps) when `engine=True` (default on device backends), else to the
+     per-partition reference executor `execute_geometry`.
 
 MAC slack revalidation (`FMMSession.step`)
 ------------------------------------------
@@ -60,8 +65,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import protocols as proto
-from repro.core.fmm import (downward_pass, l2p_pass, m2l_apply, m2p_apply,
-                            p2p_apply, upward_pass)
+from repro.core.fmm import (_resolve_kernels, downward_pass, l2p_pass,
+                            m2l_apply, m2p_apply, p2p_apply, upward_pass)
 from repro.core.hsdx import adjacency_from_boxes, graph_diameter
 from repro.core.let import LETData, extract_lets, graft, refresh_let
 from repro.core.multipole import get_operators
@@ -74,7 +79,7 @@ from repro.core.tree import build_tree
 __all__ = ["PartitionSpec", "GeometryPlan", "CommSchedule", "SessionResult",
            "StepReport", "RemoteBlock", "ReceiverPlan", "DeviceMemo",
            "plan_geometry", "schedule_comm", "execute_geometry", "FMMSession",
-           "DEFAULT_SFC_BOX_INFLATION"]
+           "sync_host_multipoles", "DEFAULT_SFC_BOX_INFLATION"]
 
 # default eps-inflation of SFC partitions' tight boxes when deriving the
 # adjacency graph (fraction of the global span); ORB regions share split
@@ -145,6 +150,12 @@ class GeometryPlan:
     slack: np.ndarray            # (P,) per-partition MAC drift budget
     partition_stats: dict = field(default_factory=dict)
     version: int = 0
+    # Partitions whose *host-side* numeric mirrors (Ms, LET payloads, grafted
+    # views) are deferred: an engine-backed session recomputes multipoles on
+    # device during within-slack steps, so the NumPy mirrors are only filled
+    # when the reference path actually needs them (sync_host_multipoles).
+    # Structure, margins, slack and the bytes matrix are never stale.
+    Ms_stale: tuple = ()
 
     @property
     def nparts(self) -> int:
@@ -221,7 +232,24 @@ class DeviceMemo:
     and the view is served from cache; when a `step` replaces it (new
     positions, multipoles, LET payloads) and the old geometry is dropped,
     the entry self-evicts — long-running sessions do not accumulate stale
-    host or device buffers."""
+    host or device buffers.
+
+    Hook contract (`asarray=` in the executors and the engine)
+    ----------------------------------------------------------
+    Any replacement hook MUST return a **device array** (`jax.Array`) for
+    every call — `hook(arr)` and `hook(arr, dtype)`.  Returning a NumPy
+    array (or any host view) would type-check downstream, but every jitted
+    kernel call would silently re-upload it, defeating the memoization the
+    hook exists for and turning the "zero transfers after warmup" guarantee
+    into a per-call transfer.  The executors therefore wrap every hook in
+    `fmm.device_hook`, which raises `TypeError` on a non-`jax.Array` return
+    instead of degrading silently.  `misses` counts actual uploads and
+    `hits` counts served cache views, so `misses` is the session's
+    host->device transfer meter (tests pin it).
+
+    NOTE: the executors call `jnp.asarray if asarray is None else asarray`
+    — never `asarray or jnp.asarray`, which would silently drop an *empty*
+    memo because `__len__` makes a fresh memo falsy."""
 
     def __init__(self):
         self._views: dict = {}
@@ -315,6 +343,14 @@ def _remote_block(i: int, let: LETData, tree, theta: float) -> RemoteBlock:
     inter = build_interaction_plan(tree, g, theta, with_m2p=True)
     return RemoteBlock(sender=i, graft=g, inter=inter,
                        margin=_m2l_margin(inter, tree, g, theta))
+
+
+def _rebind_remote(rb: RemoteBlock, let: LETData) -> RemoteBlock:
+    """Rebind a drifted sender's refreshed LET payload onto the cached
+    interaction plan: new graft view, same inter/margin (structure and MAC
+    margins are drift-invariant within slack)."""
+    return RemoteBlock(sender=rb.sender, graft=graft(let), inter=rb.inter,
+                       margin=rb.margin)
 
 
 def plan_geometry(x, q, spec: PartitionSpec | None = None,
@@ -414,11 +450,51 @@ def schedule_comm(geometry, protocol: str = "hsdx",
 
 
 # --------------------------------------------------------------- executor --
-def execute_geometry(geo, use_pallas: bool = False, asarray=None) -> np.ndarray:
-    """Kernels + gathers only: no traversal, no list building, no padding.
-    Works on any plan-shaped object (GeometryPlan or the legacy
-    DistributedPlan).  With `asarray=DeviceMemo(...)`, every frozen index
-    table is uploaded to the device at most once across calls."""
+def sync_host_multipoles(geo) -> None:
+    """Fill the deferred host-side numeric mirrors of `geo.Ms_stale`
+    partitions: recompute their NumPy multipoles about the build-time
+    expansion centers, rebind every LET payload they send, and re-graft the
+    receiver views over the refreshed LETs.  In place — this is a cache
+    fill (the values are exactly what an eager step would have produced),
+    not a semantic mutation; no-op when nothing is stale."""
+    stale = set(getattr(geo, "Ms_stale", ()))
+    if not stale:
+        return
+    ops = get_operators(geo.spec.p)
+    for j in sorted(stale):
+        geo.Ms[j] = np.asarray(upward_pass(geo.trees[j], ops,
+                                           sched=geo.scheds[j]))
+    for (i, j), let in list(geo.lets.items()):
+        if i in stale:
+            geo.lets[(i, j)] = refresh_let(let, geo.trees[i], geo.Ms[i])
+    for j, r in enumerate(geo.receivers):
+        if r is None:
+            continue
+        if j not in stale and not any(rb.sender in stale for rb in r.remote):
+            continue
+        remote = [_rebind_remote(rb, geo.lets[(rb.sender, j)])
+                  if rb.sender in stale else rb
+                  for rb in r.remote]
+        # rebind the receiver's own (payload-rebound) tree too: the deferred
+        # step skipped the ReceiverPlan rebuild, so r.tree still references
+        # pre-step coordinates
+        geo.receivers[j] = ReceiverPlan(tree=geo.trees[j], sched=r.sched,
+                                        local=r.local,
+                                        local_margin=r.local_margin,
+                                        remote=remote)
+    geo.Ms_stale = ()
+
+
+def execute_geometry(geo, use_kernels: bool = False, asarray=None,
+                     use_pallas: bool | None = None) -> np.ndarray:
+    """Reference executor — kernels + gathers only, one partition at a time:
+    no traversal, no list building, no padding.  Works on any plan-shaped
+    object (GeometryPlan or the legacy DistributedPlan).  With
+    `asarray=DeviceMemo(...)`, every frozen index table is uploaded to the
+    device at most once across calls.  The batched replacement lives in
+    repro.core.engine (this path is what its golden tests pin against)."""
+    use_kernels = _resolve_kernels(use_kernels, use_pallas, "execute_geometry")
+    sync_host_multipoles(geo)
     ops = get_operators(geo.p)
     phi = np.zeros(geo.n)
     for j in range(geo.nparts):
@@ -427,14 +503,14 @@ def execute_geometry(geo, use_pallas: bool = False, asarray=None) -> np.ndarray:
             continue
         t = r.tree
         L = m2l_apply(ops, geo.Ms[j], r.local, asarray=asarray)
-        phi_local = p2p_apply(t, t, r.local, use_pallas=use_pallas,
+        phi_local = p2p_apply(t, t, r.local, use_kernels=use_kernels,
                               asarray=asarray)
         for rb in r.remote:
             if rb.inter.n_m2l:
                 L = L + m2l_apply(ops, rb.graft.M, rb.inter, asarray=asarray)
             if rb.inter.n_p2p:
                 phi_local += p2p_apply(t, rb.graft, rb.inter,
-                                       use_pallas=use_pallas, asarray=asarray)
+                                       use_kernels=use_kernels, asarray=asarray)
             if rb.inter.n_m2p:
                 phi_local += m2p_apply(t, rb.graft.M, rb.inter, p=geo.p,
                                        asarray=asarray)
@@ -452,11 +528,36 @@ class FMMSession:
     the first evaluation uploads each table once; every later evaluation is
     kernels-only with zero host->device plan transfers.  `potentials` caches
     the (protocol-independent) potential per geometry version, so
-    `.sweep()` answers all four protocols from a single execution."""
+    `.sweep()` answers all four protocols from a single execution.
 
-    def __init__(self, geometry: GeometryPlan, use_pallas: bool = False):
+    Engine dispatch: with `engine=True` (the default whenever a device
+    backend is present) evaluation runs through `repro.core.engine`'s
+    `DeviceEngine` — one batched multi-tree upward launch, a segment-summed
+    M2L over all (receiver, sender) pairs, and Pallas-bucketed P2P — and
+    within-slack `.step()`s skip the per-partition host multipole refresh
+    entirely: the engine restacks one (x, q) payload pair and recomputes
+    every drifting partition's multipoles on device (the host-side NumPy
+    mirrors are refilled lazily by `sync_host_multipoles` only if the
+    reference path asks for them).  `engine=False` forces the per-partition
+    reference executor (`execute_geometry`)."""
+
+    def __init__(self, geometry: GeometryPlan, engine: bool | None = None,
+                 use_kernels: bool | None = None,
+                 use_pallas: bool | None = None):
+        from repro.core.engine import (default_engine_enabled,
+                                       default_use_kernels)
+        if use_pallas is not None:      # deprecated alias, warn-once + honor
+            if use_kernels is not None:
+                raise ValueError(
+                    "pass use_kernels only; use_pallas is its deprecated "
+                    "alias and conflicts when both are given")
+            use_kernels = _resolve_kernels(False, use_pallas, "FMMSession")
         self._geo = geometry
-        self.use_pallas = use_pallas
+        self.engine_enabled = (default_engine_enabled() if engine is None
+                               else bool(engine))
+        self.use_kernels = (default_use_kernels() if use_kernels is None
+                            else bool(use_kernels))
+        self._engine = None
         self._memo = DeviceMemo()
         self._comm_cache: dict = {}
         self._phi: np.ndarray | None = None
@@ -464,9 +565,11 @@ class FMMSession:
 
     @classmethod
     def from_points(cls, x, q, spec: PartitionSpec | None = None,
-                    use_pallas: bool = False, **overrides) -> "FMMSession":
-        return cls(plan_geometry(x, q, spec, **overrides),
-                   use_pallas=use_pallas)
+                    engine: bool | None = None,
+                    use_kernels: bool | None = None,
+                    use_pallas: bool | None = None, **overrides) -> "FMMSession":
+        return cls(plan_geometry(x, q, spec, **overrides), engine=engine,
+                   use_kernels=use_kernels, use_pallas=use_pallas)
 
     @property
     def geometry(self) -> GeometryPlan:
@@ -475,6 +578,21 @@ class FMMSession:
     @property
     def memo(self) -> DeviceMemo:
         return self._memo
+
+    @property
+    def engine(self):
+        """The session's `DeviceEngine`, building it on first access (engine
+        dispatch enabled) or returning None (reference dispatch)."""
+        if not self.engine_enabled:
+            return None
+        if self._engine is None or self._engine.geo is not self._geo:
+            from repro.core.engine import DeviceEngine
+            # share the session memo: sess.memo.misses stays THE transfer
+            # meter whichever dispatch path runs
+            self._engine = DeviceEngine(self._geo,
+                                        use_kernels=self.use_kernels,
+                                        asarray=self._memo)
+        return self._engine
 
     # ------------------------------------------------------------- comm ---
     def comm(self, protocol: str = "hsdx", grain_bytes: int | None = None,
@@ -495,12 +613,17 @@ class FMMSession:
     # ------------------------------------------------------------ kernels -
     def evaluate(self) -> np.ndarray:
         """Run the kernel pipeline now (ignoring the potential cache) against
-        memoized device views; refreshes the cached potential.  The returned
-        array is marked read-only: it is shared by every SessionResult of
-        this geometry version, so in-place mutation would corrupt the cache
-        — copy it to post-process."""
-        phi = execute_geometry(self._geo, use_pallas=self.use_pallas,
-                               asarray=self._memo)
+        memoized device views; refreshes the cached potential.  Dispatches
+        through the batched `DeviceEngine` when engine mode is on, else the
+        per-partition reference executor.  The returned array is marked
+        read-only: it is shared by every SessionResult of this geometry
+        version, so in-place mutation would corrupt the cache — copy it to
+        post-process."""
+        if self.engine_enabled:
+            phi = self.engine.evaluate()
+        else:
+            phi = execute_geometry(self._geo, use_kernels=self.use_kernels,
+                                   asarray=self._memo)
         phi.setflags(write=False)
         self._phi, self._phi_version = phi, self._geo.version
         return phi
@@ -578,20 +701,35 @@ class FMMSession:
         if report.cache_hit:
             return report
 
+        # Engine-backed sessions keep within-slack refreshes device-resident:
+        # defer the per-partition host multipole/LET payload refresh (filled
+        # lazily by sync_host_multipoles iff the reference path needs it) —
+        # the engine recomputes every drifting partition's multipoles in one
+        # batched launch from the restacked (x, q) payload.
+        defer = self.engine_enabled and not rebuilt
         self._geo = self._advance(geo, new_x, new_q, delta,
-                                  set(rebuilt), set(refreshed))
+                                  set(rebuilt), set(refreshed),
+                                  defer_numeric=defer)
         self._phi = None
         if rebuilt:                         # bytes matrix / adjacency changed
             self._comm_cache.clear()
+            self._engine = None             # structure changed: tables stale
+        elif self._engine is not None:
+            self._engine.refresh_payload(self._geo)
         return report
 
     @staticmethod
     def _advance(geo: GeometryPlan, new_x, new_q, delta,
-                 rebuilt: set, refreshed: set) -> GeometryPlan:
+                 rebuilt: set, refreshed: set,
+                 defer_numeric: bool = False) -> GeometryPlan:
         spec = geo.spec
         P = spec.nparts
         ops = get_operators(spec.p)
         touched = rebuilt | refreshed
+        if rebuilt:
+            # LET re-extraction below reads refreshed senders' host
+            # multipoles: fill any deferred mirrors first
+            sync_host_multipoles(geo)
         trees, scheds, Ms = list(geo.trees), list(geo.scheds), list(geo.Ms)
         boxes, adj_boxes = geo.boxes.copy(), geo.adj_boxes.copy()
         lets, B = dict(geo.lets), geo.bytes_matrix.copy()
@@ -613,12 +751,15 @@ class FMMSession:
 
         # 2. drift within slack: same structure, rebound coordinates/charges
         #    and recomputed multipoles about the build-time expansion centers
+        #    (multipole recompute deferred to the device engine when it owns
+        #    evaluation — sync_host_multipoles fills the NumPy mirror lazily)
         for j in refreshed:
             idx = geo.owners[j]
             t = trees[j]
             t = dc_replace(t, x=new_x[idx][t.perm], q=new_q[idx][t.perm])
             trees[j] = t
-            Ms[j] = np.asarray(upward_pass(t, ops, sched=scheds[j]))
+            if not defer_numeric:
+                Ms[j] = np.asarray(upward_pass(t, ops, sched=scheds[j]))
 
         # 3. LETs: re-extract a pair iff either end was rebuilt; rebind the
         #    payload iff only the sender drifted within slack
@@ -640,16 +781,18 @@ class FMMSession:
                                                         lo, hi, spec.theta)):
                     lets[(i, j)] = let
                     B[i, j] = let.nbytes
-            if i in refreshed:      # rebuilt senders were re-extracted above
+            if i in refreshed and not defer_numeric:
+                # rebuilt senders were re-extracted above
                 for j in range(P):
                     if j != i and (i, j) in lets and j not in rebuilt:
                         lets[(i, j)] = refresh_let(lets[(i, j)], trees[i],
                                                    Ms[i])
 
         # 4. receiver plans: re-traverse a pair iff either end was rebuilt;
-        #    re-graft (cheap view) iff its LET payload was rebound
+        #    re-graft (cheap view) iff its LET payload was rebound (deferred
+        #    with the payload itself under engine dispatch)
         receivers = list(geo.receivers)
-        for j in range(P):
+        for j in range(P) if not defer_numeric else ():
             if trees[j] is None:
                 continue
             r = receivers[j]
@@ -663,9 +806,7 @@ class FMMSession:
                     remote.append(_remote_block(i, lets[(i, j)], trees[j],
                                                 spec.theta))
                 elif i in touched:
-                    rb = old[i]
-                    remote.append(RemoteBlock(sender=i, graft=graft(lets[(i, j)]),
-                                              inter=rb.inter, margin=rb.margin))
+                    remote.append(_rebind_remote(old[i], lets[(i, j)]))
                 else:
                     remote.append(old[i])
             if j in rebuilt:
@@ -685,10 +826,16 @@ class FMMSession:
         else:
             deg, diam, slack = geo.adjacency_degree, geo.diameter, geo.slack
 
+        # deferred-mirror bookkeeping: rebuilds synced everything up front;
+        # otherwise carry prior stale partitions (minus any recomputed now)
+        prior = set() if rebuilt else set(geo.Ms_stale)
+        stale = tuple(sorted((prior | refreshed) if defer_numeric
+                             else (prior - refreshed)))
         return GeometryPlan(
             spec=spec, n=geo.n, x0=new_x, q0=new_q, x_ref=x_ref,
             part=geo.part, owners=geo.owners, boxes=boxes,
             adj_boxes=adj_boxes, trees=trees, scheds=scheds, Ms=Ms, lets=lets,
             receivers=receivers, bytes_matrix=B, adjacency_degree=deg,
             diameter=diam, slack=slack,
-            partition_stats=geo.partition_stats, version=geo.version + 1)
+            partition_stats=geo.partition_stats, version=geo.version + 1,
+            Ms_stale=stale)

@@ -111,7 +111,7 @@ def build_distributed_plan(x, q, nparts: int = 8, method: str = "orb",
 def execute_distributed_plan(plan: DistributedPlan,
                              use_pallas: bool = False) -> np.ndarray:
     """Kernels + gathers only: no traversal, no list building, no padding."""
-    return execute_geometry(plan, use_pallas=use_pallas)
+    return execute_geometry(plan, use_kernels=use_pallas)
 
 
 def run_distributed_fmm(x, q, nparts: int = 8, method: str = "orb",

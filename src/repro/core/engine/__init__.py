@@ -1,0 +1,156 @@
+"""Device evaluation engine: batched multi-tree FMM execution.
+
+Fourth tier of the pipeline — `plan_geometry` (host geometry) ->
+`schedule_comm` (protocol schedules) -> **`DeviceEngine`** (batched device
+execution) -> `FMMSession` (orchestration).  A `DeviceEngine` is compiled
+once per `GeometryPlan`: `schedules.build_engine_tables` stacks every
+partition's frozen per-tree tables into `(n_parts, ...)` envelopes, and
+evaluation then runs
+
+  1. one batched upward launch (`upward.batched_upward_kernel`) — P2M + M2M
+     for ALL partitions, replacing the per-partition Python sweep;
+  2. one far-field launch (`m2l.far_tail_kernel`) — a segment-summed M2L
+     over every (receiver, sender) pair reading sender-global device
+     multipoles (grafted LETs never materialize on the host), the stacked
+     downward sweep, and the leaf evaluation;
+  3. one launch per P2P width-class bucket (`p2p.p2p_bucket_vals`),
+     Pallas-backed with per-(S, n_pairs) autotuned block sizes on device
+     backends, jnp reference on CPU; plus one batched M2P fallback launch.
+
+Float64 accumulation of the f32 value tables happens once on the host, at
+the API boundary — identical precision to the reference executors, which is
+what pins the engine allclose to `api.execute_geometry`.
+
+Timesteps: index tables are payload-independent, so a within-slack
+`FMMSession.step` calls `refresh_payload` — restack + upload ONE `(x, q)`
+array pair, invalidate the cached multipoles — and the next evaluation
+recomputes every drifting partition's multipoles on device in a single
+launch: zero per-partition host->device multipole transfers (the
+`DeviceMemo.misses` counter is the transfer meter tests pin).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine.m2l import far_tail_kernel, m2p_vals_kernel
+from repro.core.engine.p2p import p2p_bucket_vals
+from repro.core.engine.schedules import (BatchedUpwardSchedule, EngineTables,
+                                         build_batched_upward,
+                                         build_engine_tables, stack_bodies)
+from repro.core.engine.upward import batched_upward, batched_upward_kernel
+from repro.core.fmm import device_hook
+from repro.core.multipole import get_operators
+
+__all__ = ["DeviceEngine", "EngineTables", "BatchedUpwardSchedule",
+           "build_engine_tables", "build_batched_upward", "batched_upward",
+           "batched_upward_kernel", "stack_bodies", "default_engine_enabled",
+           "default_use_kernels"]
+
+
+def default_engine_enabled() -> bool:
+    """Engine dispatch default: batched execution wins on any real device
+    backend (launch count dominates); the per-partition reference path stays
+    the CPU default so CPU test runs pin it byte-identically."""
+    return jax.default_backend() not in ("cpu",)
+
+
+def default_use_kernels() -> bool:
+    """Pallas kernel dispatch default: only where the kernels actually
+    COMPILE — the same predicate repro.kernels.ops uses for interpret mode.
+    On backends where Pallas would run interpreted (traced Python, orders of
+    magnitude slower than the jnp path), the engine keeps the jnp route."""
+    from repro.kernels import ops
+    return not ops.INTERPRET
+
+
+class DeviceEngine:
+    """Batched device executor for one `GeometryPlan` (one tree *structure*;
+    the numeric payload may rebind across timesteps via `refresh_payload`).
+
+    Parameters
+    ----------
+    geometry : api.GeometryPlan
+    use_kernels : route P2P buckets through the Pallas kernels; default
+        `default_use_kernels()` (on iff a device backend is present).
+    interpret : force Pallas interpret mode (CI smoke on CPU runners).
+    asarray : device-upload hook (api.DeviceMemo or compatible); a fresh
+        `DeviceMemo` is created when omitted.  `memo.misses` counts every
+        host->device transfer the engine performs.
+    """
+
+    def __init__(self, geometry, *, use_kernels: bool | None = None,
+                 interpret: bool | None = None, asarray=None):
+        from repro.core.api import DeviceMemo
+        self.geo = geometry
+        self.use_kernels = (default_use_kernels() if use_kernels is None
+                            else bool(use_kernels))
+        self.interpret = interpret
+        self.memo = DeviceMemo() if asarray is None else asarray
+        self._aa = device_hook(self.memo)
+        self.tables: EngineTables = build_engine_tables(geometry)
+        self._x_pad, self._q_pad = stack_bodies(geometry.trees,
+                                                self.tables.n_bodies_max)
+        self._ops = get_operators(geometry.p)
+        self._M = None               # cached device multipoles (P, Cmax, nk)
+        self.payload_refreshes = 0
+
+    # ----------------------------------------------------------- payload --
+    def refresh_payload(self, geometry) -> None:
+        """Rebind to a same-structure geometry (within-slack step): restack
+        the (x, q) payload and invalidate cached device multipoles.  Index
+        tables — and their memoized device views — are reused untouched."""
+        self.geo = geometry
+        self._x_pad, self._q_pad = stack_bodies(geometry.trees,
+                                                self.tables.n_bodies_max)
+        self._M = None
+        self.payload_refreshes += 1
+
+    # ------------------------------------------------------------ passes --
+    def upward(self):
+        """Device multipoles (P, n_cells_max, nk); cached per payload."""
+        if self._M is None:
+            self._M = batched_upward(self._ops, self._x_pad, self._q_pad,
+                                     self.tables.up, asarray=self.memo)
+        return self._M
+
+    def evaluate(self) -> np.ndarray:
+        """Full potential in original body order (float64, host)."""
+        t = self.tables
+        aa = self._aa
+        M = self.upward()
+        x = aa(self._x_pad, jnp.float32)
+        q = aa(self._q_pad, jnp.float32)
+        ut = t.up.tables
+
+        l2p_vals = far_tail_kernel(
+            self._ops, M, x,
+            {k: aa(v) for k, v in t.m2l.items()},
+            aa(ut["down_ids"]), aa(ut["down_parents"]), aa(ut["down_mask"]),
+            aa(ut["down_d"]), aa(ut["leaves"]), aa(ut["leaf_mask"]),
+            aa(ut["leaf_centers"]), aa(ut["leaf_idx"]))
+
+        phi_flat = np.zeros(t.n_parts * t.n_bodies_max)
+        np.add.at(phi_flat, t.l2p_t_idx.ravel(),
+                  np.where(ut["leaf_valid"].ravel(),
+                           np.asarray(l2p_vals, np.float64).ravel(), 0.0))
+
+        for bucket in t.p2p_buckets:
+            vals = p2p_bucket_vals(x, q, bucket, use_kernels=self.use_kernels,
+                                   interpret=self.interpret, asarray=self.memo)
+            np.add.at(phi_flat, bucket["t_idx"].ravel(),
+                      np.where(bucket["t_valid"].ravel(),
+                               vals.astype(np.float64).ravel(), 0.0))
+
+        if t.m2p["b"].shape[0]:
+            vals = m2p_vals_kernel(self._ops, M, x, aa(t.m2p["b"]),
+                                   aa(t.m2p["centers"]), aa(t.m2p["mask"]),
+                                   aa(t.m2p["t_idx"]))
+            np.add.at(phi_flat, t.m2p["t_idx"].ravel(),
+                      np.where(t.m2p["t_valid"].ravel(),
+                               np.asarray(vals, np.float64).ravel(), 0.0))
+
+        phi = np.zeros(t.n)
+        phi[t.orig_idx] = phi_flat[t.flat_idx]
+        return phi

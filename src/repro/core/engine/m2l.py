@@ -1,0 +1,66 @@
+"""Batched far field: one segment-summed M2L over every (receiver, sender)
+pair, then a vmapped downward sweep and leaf evaluation.
+
+The reference path scatters one M2L launch per interaction plan (local plus
+one per remote block, per receiver) and walks each receiver's L2L levels in
+its own Python loop.  The engine flattens all of it:
+
+  - M2L: every plan's valid pair rows are concatenated — receiver-major,
+    local block first then senders ascending, matching the reference
+    accumulation order — with *global* cell ids (`p * n_cells_max + c`), and
+    applied as ONE `ops.m2l_v` + segment-sum scatter into the flat local
+    array.  Grafted-LET sources were translated to sender-global ids at
+    table-build time, so remote M2L reads the sender's device multipoles
+    directly: no LET payload ever crosses the host boundary.
+  - Downward/L2P: top-aligned stacked level tables, one vmapped L2L scatter
+    per level slot, then one vmapped leaf evaluation producing the padded
+    value tables the host accumulates in float64.
+  - M2P fallback rows (truncated remote cells vs large local leaves) batch
+    the same way against the flat multipole array.
+
+Values return as padded f32 tables; the final float64 accumulation happens
+once on the host (matching the reference executors' precision exactly).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["far_tail_kernel", "m2p_vals_kernel"]
+
+
+@partial(jax.jit, static_argnums=(0,))
+def far_tail_kernel(ops, M, x, m2l, down_ids, down_parents, down_mask,
+                    down_d, leaves, leaf_mask, leaf_centers, leaf_idx):
+    """M (P,C,nk), x (P,N,3) + tables -> padded L2P values (P, Bl, W)."""
+    P, C, nk = M.shape
+    M_flat = M.reshape(P * C, nk)
+    L_flat = jnp.zeros_like(M_flat)
+    if m2l["src"].shape[0]:
+        contrib = ops.m2l_v(M_flat[m2l["src"]], m2l["d"]) * m2l["mask"][:, None]
+        L_flat = L_flat.at[m2l["tgt"]].add(contrib)
+    L = L_flat.reshape(P, C, nk)
+
+    def l2l_one(Lp, ids, parents, mask, d):
+        contrib = ops.l2l_v(Lp[parents], d) * mask[:, None]
+        return Lp.at[ids].add(contrib)
+
+    for lvl in range(down_ids.shape[1]):         # slot 0 = level 1 (top)
+        L = jax.vmap(l2l_one)(L, down_ids[:, lvl], down_parents[:, lvl],
+                              down_mask[:, lvl], down_d[:, lvl])
+
+    def l2p_one(Lp, xp, lf, lm, lc, li):
+        return ops.l2p_v(Lp[lf], xp[li], lc) * lm[:, None]
+
+    return jax.vmap(l2p_one)(L, x, leaves, leaf_mask, leaf_centers, leaf_idx)
+
+
+@partial(jax.jit, static_argnums=(0,))
+def m2p_vals_kernel(ops, M, x, b, centers, mask, t_idx):
+    """Batched M2P fallback values (B, wt) against flat global multipoles."""
+    P, C, nk = M.shape
+    M_flat = M.reshape(P * C, nk)
+    x_flat = x.reshape(-1, 3)
+    return ops.m2p_v(M_flat[b], x_flat[t_idx], centers) * mask[:, None]

@@ -1,0 +1,47 @@
+"""Bucketed P2P execution: every width class in one launch, Pallas-backed.
+
+`plan.build_p2p_blocks` buckets leaf pairs by power-of-two source width per
+(target, source) tree pair; `schedules.build_engine_tables` merges those
+blocks ACROSS all (receiver, sender) pairs of the geometry, so one geometry
+yields a handful of width classes — each executed as a single batched launch
+over global body ids instead of one launch per tree pair per width.
+
+Kernel dispatch: with `use_kernels=True` each bucket routes through the
+Pallas kernel (`repro.kernels.ops.p2p_auto`) with a per-(S, n_pairs)
+autotuned target block size; otherwise the jnp reference path
+(`fmm._p2p_vals`) runs — the CPU/interpret fallback the engine defaults to
+off-device.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fmm import _p2p_vals, device_hook
+
+__all__ = ["p2p_bucket_vals"]
+
+
+@jax.jit
+def _gather_bucket(x, q, t_idx, s_idx, s_valid):
+    """Global-id gathers for one bucket: x (P,N,3), q (P,N) payload."""
+    x_flat = x.reshape(-1, 3)
+    q_flat = q.reshape(-1)
+    xt = x_flat[t_idx]                            # (B, wt, 3)
+    xs = x_flat[s_idx]                            # (B, ws, 3)
+    qs = jnp.where(s_valid, q_flat[s_idx], 0.0)   # (B, ws)
+    return xt, xs, qs
+
+
+def p2p_bucket_vals(x, q, bucket, use_kernels: bool = False,
+                    interpret: bool | None = None, asarray=None) -> np.ndarray:
+    """Evaluate one width-class bucket -> (B, wt) f32 host values (masked)."""
+    aa = device_hook(asarray)
+    xt, xs, qs = _gather_bucket(x, q, aa(bucket["t_idx"]), aa(bucket["s_idx"]),
+                                aa(bucket["s_valid"]))
+    if use_kernels:
+        from repro.kernels.ops import p2p_auto
+        vals = np.asarray(p2p_auto(qs, xs, xt, interpret=interpret))
+        return vals * bucket["mask"][:, None]
+    return np.asarray(_p2p_vals(xt, xs, qs, aa(bucket["mask"])))

@@ -1,0 +1,62 @@
+"""Batched multi-tree upward pass: P2M + M2M for every partition in one
+jitted launch.
+
+The reference path (fmm.upward_pass) runs one P2M scatter plus one M2M
+scatter per level *per tree*, driven by a Python loop over partitions — a
+host round-trip per launch.  Here the stacked tables of
+`schedules.build_batched_upward` drive a single `jax.vmap` over the
+partition axis: per-partition arithmetic is the *same traced closure*
+(`ops.p2m_v` / `ops.m2m_v`) the reference kernels use, so the result is
+bitwise-identical per partition — padding rows gather in-range slot 0 and
+contribute exactly 0 through their masks.
+
+Level slots are bottom-aligned (slot 0 = each tree's own deepest level), so
+M2M always runs children-before-parents even when partition depths differ.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fmm import device_hook
+
+__all__ = ["batched_upward_kernel", "batched_upward"]
+
+
+@partial(jax.jit, static_argnums=(0,), static_argnames=("n_cells",))
+def batched_upward_kernel(ops, x, q, leaves, leaf_mask, leaf_centers,
+                          leaf_idx, leaf_valid, up_ids, up_parents, up_mask,
+                          up_d, n_cells):
+    """x (P,N,3) f32, q (P,N) f32 + stacked tables -> M (P, n_cells, nk)."""
+    def p2m_one(xp, qp, lf, lm, lc, li, lv):
+        xi = xp[li]                              # (Bl, W, 3)
+        qi = jnp.where(lv, qp[li], 0.0)
+        M_leaf = ops.p2m_v(qi, xi, lc) * lm[:, None]
+        return jnp.zeros((n_cells, ops.nk), jnp.float32).at[lf].add(M_leaf)
+
+    M = jax.vmap(p2m_one)(x, q, leaves, leaf_mask, leaf_centers,
+                          leaf_idx, leaf_valid)
+
+    def m2m_one(Mp, ids, parents, mask, d):
+        contrib = ops.m2m_v(Mp[ids], d) * mask[:, None]
+        return Mp.at[parents].add(contrib)
+
+    for lvl in range(up_ids.shape[1]):           # slot 0 = deepest level
+        M = jax.vmap(m2m_one)(M, up_ids[:, lvl], up_parents[:, lvl],
+                              up_mask[:, lvl], up_d[:, lvl])
+    return M
+
+
+def batched_upward(ops, x_pad, q_pad, sched, asarray=None) -> jnp.ndarray:
+    """Run the batched upward pass from a `BatchedUpwardSchedule` and stacked
+    payload (`schedules.stack_bodies`). -> (P, n_cells_max, nk) device array."""
+    aa = device_hook(asarray)
+    t = sched.tables
+    return batched_upward_kernel(
+        ops, aa(x_pad, jnp.float32), aa(q_pad, jnp.float32),
+        aa(t["leaves"]), aa(t["leaf_mask"]), aa(t["leaf_centers"]),
+        aa(t["leaf_idx"]), aa(t["leaf_valid"]),
+        aa(t["up_ids"]), aa(t["up_parents"]), aa(t["up_mask"]), aa(t["up_d"]),
+        n_cells=sched.n_cells_max)

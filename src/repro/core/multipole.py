@@ -16,7 +16,7 @@ pure JAX functions, vmap-able and differentiable.
 from __future__ import annotations
 
 import math
-from functools import lru_cache, partial
+from functools import cached_property, lru_cache, partial
 
 import jax
 import jax.numpy as jnp
@@ -197,6 +197,35 @@ class MultipoleOperators:
             return jnp.sum(M * self._sign_K * D[self._m2l_idx[0, :]])
         # m2l_idx[0, :] maps k -> index of (0 + k) = k in E
         return jax.vmap(one)(y)
+
+    # ---- batched (vmapped) operators --------------------------------------
+    # One vmap per operator, built once per operator set: the jitted executors
+    # (fmm.py) and the batched multi-tree engine (repro.core.engine) map the
+    # same closures over padded leaf/pair tables, so the traced subgraphs —
+    # and therefore the JIT cache entries keyed on them — are shared.
+    @cached_property
+    def p2m_v(self):
+        return jax.vmap(self.p2m)
+
+    @cached_property
+    def m2m_v(self):
+        return jax.vmap(self.m2m)
+
+    @cached_property
+    def m2l_v(self):
+        return jax.vmap(self.m2l)
+
+    @cached_property
+    def l2l_v(self):
+        return jax.vmap(self.l2l)
+
+    @cached_property
+    def l2p_v(self):
+        return jax.vmap(self.l2p)
+
+    @cached_property
+    def m2p_v(self):
+        return jax.vmap(self.m2p)
 
 
 # ---- P2P (reference; the Pallas kernel lives in repro.kernels.p2p) --------

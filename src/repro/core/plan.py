@@ -1,16 +1,23 @@
 """Interaction plans: the plan/execute split for the FMM host pipeline.
 
-Architecture: three layers over plan vs execute
------------------------------------------------
+Architecture: plan -> schedule -> engine
+----------------------------------------
 Every FMM evaluation decomposes into two very different kinds of work —
 **plan construction** (this module, pure NumPy: dual-tree traversal,
 pair-list padding and bucketing, leaf body-gather index tables, per-level
-upward/downward schedules) and **plan execution** (`fmm.execute_fmm_plan`
-and the `*_pass` functions, JAX kernels gathering through the precomputed
-index tables with no list construction and no padding work).
+upward/downward schedules) and **plan execution** (JAX kernels gathering
+through the precomputed index tables with no list construction and no
+padding work).  Execution itself now comes in two tiers: the per-tree
+*reference* executors (`fmm.execute_fmm_plan` and the `*_pass` functions,
+one launch per tree per pass) and the *batched device engine*
+(repro.core.engine), which stacks every partition's frozen tables into
+`(n_parts, ...)` envelopes and runs each phase for the whole geometry in a
+single launch — one vmapped multi-tree upward pass, one segment-summed M2L
+over all (receiver, sender) pairs, and Pallas-bucketed P2P with autotuned
+block sizes.
 
-The distributed pipeline exposes that split as three composable layers
-(repro.core.api), one per independent axis of the paper:
+The distributed pipeline composes those tiers (repro.core.api), one per
+independent axis of the paper plus the hardware floor:
 
   1. `plan_geometry(x, q, PartitionSpec) -> GeometryPlan` — partitioning,
      completely local trees, batched sender-side LET extraction and every
@@ -22,18 +29,24 @@ The distributed pipeline exposes that split as three composable layers
      function over the frozen bytes matrix and Lemma-1 adjacency boxes
      (protocols.py), so sweeping all four exchange protocols reuses one
      `GeometryPlan` with zero re-extraction.
-  3. `FMMSession` — memoized device-resident views of the frozen NumPy
-     index tables (each table uploads once; later executions are
-     kernels-only), protocol sweeps from a single evaluation, and
-     `.step(new_x)` timestep revalidation through MAC slack margins that
-     rebuilds only invalidated partitions.
+  3. `engine.DeviceEngine(geometry)` — the execution tier: payload-
+     independent stacked index tables compiled once per geometry, LET
+     indices translated to sender-global device ids (no LET payload ever
+     materializes on the host), float64 accumulation only at the API
+     boundary.  Within-slack timesteps rebind ONE stacked (x, q) payload
+     pair and recompute every drifting partition's multipoles on device.
+  4. `FMMSession` — orchestration: memoized device views, protocol sweeps
+     from a single evaluation, `.step(new_x)` MAC-slack revalidation that
+     rebuilds only invalidated partitions, and engine/reference dispatch
+     (`engine=` flag, default on when a device backend is present).
 
 A plan is built once and executed many times — time-stepped N-body where
 geometry changes slowly, or protocol sweeps over the same partitioning —
 which is what makes the host side disappear from the hot path.  All plan
 dataclasses are frozen: a plan is immutable geometry metadata.  This module
-stays NumPy-only; device residency is the session's concern (api.DeviceMemo
-threads through the executors' `asarray` hook).
+stays NumPy-only; device residency is the session/engine concern
+(api.DeviceMemo threads through the executors' `asarray` hook, and the
+engine's stacked tables ride the same memo).
 
 Key structures:
 

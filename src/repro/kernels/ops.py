@@ -23,6 +23,20 @@ def p2p_blocked(q, x_src, x_tgt):
     return _p2p.p2p_pallas(q, x_src, x_tgt, interpret=INTERPRET)
 
 
+def p2p_auto(q, x_src, x_tgt, *, interpret: bool | None = None):
+    """Pallas P2P with a per-bucket-shape autotuned target block size.
+
+    The (S, n_pairs) shape class is looked up in the kernel's autotune cache
+    (repro.kernels.p2p.best_block_t): measured once per class on device
+    backends, heuristic under interpret mode."""
+    interpret = INTERPRET if interpret is None else interpret
+    P, S, _ = x_src.shape
+    block = _p2p.best_block_t(S, P, x_tgt.shape[1], interpret=interpret,
+                              sample=(q, x_src, x_tgt))
+    return _p2p.p2p_pallas(q, x_src, x_tgt, interpret=interpret,
+                           block_t=block)
+
+
 def flash_attention(q, k, v, *, causal=True, window=None):
     return _attn.flash_attention(q, k, v, causal=causal, window=window,
                                  interpret=INTERPRET)

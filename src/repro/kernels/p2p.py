@@ -7,11 +7,18 @@ up to S sources and T targets:
     phi[p, t] = sum_s q[p, s] / |x_tgt[p, t] - x_src[p, s]|     (self term 0)
 
 TPU adaptation (vs the paper's SIMD CPU loops): targets are tiled into
-VMEM-resident blocks of TB=128 (lane-aligned); the full source block for the
-pair stays in VMEM across the target tile; coordinates are laid out
-structure-of-arrays (3, S) so the subtraction broadcasts on the VPU's 8x128
-registers; the q-weighted reduction runs as an (TB, S) x (S,) contraction.
-Arithmetic intensity ~ 6 flops / 4 bytes per (t, s) pair at S=256.
+VMEM-resident blocks of `block_t` lanes (lane-aligned multiples of 128); the
+full source block for the pair stays in VMEM across the target tile;
+coordinates are laid out structure-of-arrays (3, S) so the subtraction
+broadcasts on the VPU's 8x128 registers; the q-weighted reduction runs as an
+(block_t, S) x (S,) contraction.  Arithmetic intensity ~ 6 flops / 4 bytes
+per (t, s) pair at S=256.
+
+The engine's P2P buckets (repro.core.engine.p2p) arrive with power-of-two
+source widths S that vary per bucket; `best_block_t` picks the target block
+size per (S, n_pairs) shape class and caches the choice — a one-entry
+autotune per bucket shape, measured on real device backends and heuristic
+under interpret mode (where wall time is meaningless).
 """
 from __future__ import annotations
 
@@ -21,15 +28,23 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-TB = 128  # target block (lane-aligned)
+TB = 128                        # default target block (lane-aligned)
+BLOCK_CANDIDATES = (128, 256, 512)
+
+# (S, n_pairs, T) -> chosen target block size.  Keyed by the bucket's padded
+# shape class, NOT by array identity: every execution of the same geometry
+# (and every geometry sharing bucket shapes) reuses one autotune decision.
+# T is part of the key — buckets sharing (S, n_pairs) but differing in
+# target width need different tilings.
+_BLOCK_CACHE: dict[tuple[int, int, int], int] = {}
 
 
 def _p2p_kernel(q_ref, xs_ref, xt_ref, out_ref):
-    # blocks: q (1, S); xs (1, 3, S); xt (1, 3, TB); out (1, TB)
+    # blocks: q (1, S); xs (1, 3, S); xt (1, 3, block_t); out (1, block_t)
     q = q_ref[0]                    # (S,)
     xs = xs_ref[0]                  # (3, S)
-    xt = xt_ref[0]                  # (3, TB)
-    dx = xt[0][:, None] - xs[0][None, :]       # (TB, S)
+    xt = xt_ref[0]                  # (3, block_t)
+    dx = xt[0][:, None] - xs[0][None, :]       # (block_t, S)
     dy = xt[1][:, None] - xs[1][None, :]
     dz = xt[2][:, None] - xs[2][None, :]
     r2 = dx * dx + dy * dy + dz * dz
@@ -37,16 +52,21 @@ def _p2p_kernel(q_ref, xs_ref, xt_ref, out_ref):
     out_ref[0] = jnp.sum(inv_r * q[None, :], axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def p2p_pallas(q, x_src, x_tgt, *, interpret: bool = True):
+@functools.partial(jax.jit, static_argnames=("interpret", "block_t"))
+def p2p_pallas(q, x_src, x_tgt, *, interpret: bool = True,
+               block_t: int = TB):
     """q: (P, S); x_src: (P, S, 3); x_tgt: (P, T, 3) -> (P, T).
 
     Padding convention: padded sources carry q = 0; padded targets produce
     garbage rows the caller discards (same convention as the jnp reference).
+    `block_t` is the VMEM target tile (lane-aligned multiple of 128); pick it
+    with `best_block_t` for bucketed shapes.
     """
+    if block_t % 128 != 0:
+        raise ValueError(f"block_t must be a multiple of 128, got {block_t}")
     P, S, _ = x_src.shape
     T = x_tgt.shape[1]
-    pad_t = (-T) % TB
+    pad_t = (-T) % block_t
     xt = jnp.pad(x_tgt, ((0, 0), (0, pad_t), (0, 0)))
     Tp = T + pad_t
     # structure-of-arrays for lane-friendly broadcast
@@ -55,14 +75,63 @@ def p2p_pallas(q, x_src, x_tgt, *, interpret: bool = True):
 
     out = pl.pallas_call(
         _p2p_kernel,
-        grid=(P, Tp // TB),
+        grid=(P, Tp // block_t),
         in_specs=[
             pl.BlockSpec((1, S), lambda p, t: (p, 0)),
             pl.BlockSpec((1, 3, S), lambda p, t: (p, 0, 0)),
-            pl.BlockSpec((1, 3, TB), lambda p, t: (p, 0, t)),
+            pl.BlockSpec((1, 3, block_t), lambda p, t: (p, 0, t)),
         ],
-        out_specs=pl.BlockSpec((1, TB), lambda p, t: (p, t)),
+        out_specs=pl.BlockSpec((1, block_t), lambda p, t: (p, t)),
         out_shape=jax.ShapeDtypeStruct((P, Tp), q.dtype),
         interpret=interpret,
     )(q, xs_t, xt_t)
     return out[:, :T]
+
+
+def _heuristic_block_t(S: int, T: int) -> int:
+    """Interpret-mode / cold-cache choice: the smallest candidate covering T
+    in one tile (fewer grid steps), never exceeding a ~1 MB (3, S)+(block, S)
+    VMEM footprint per program (the last fitting candidate wins when all
+    covering ones would overflow)."""
+    choice = BLOCK_CANDIDATES[0]
+    for c in BLOCK_CANDIDATES:
+        if (c + 3) * S * 4 > 1 << 20:
+            break
+        choice = c
+        if c >= T:
+            break
+    return choice
+
+
+def best_block_t(S: int, n_pairs: int, T: int = TB, *,
+                 interpret: bool = True,
+                 sample=None) -> int:
+    """Autotuned target block size for a P2P bucket shape, cached by
+    (S, n_pairs, T).  On a real backend (`interpret=False`) the first call
+    for a shape class times every candidate on `sample` (a (q, xs, xt)
+    tuple) and keeps the argmin; under interpret mode timing is meaningless,
+    so a VMEM heuristic is cached instead."""
+    key = (int(S), int(n_pairs), int(T))
+    hit = _BLOCK_CACHE.get(key)
+    if hit is not None:
+        return hit
+    if interpret or sample is None:
+        choice = _heuristic_block_t(S, T)
+    else:
+        import statistics
+        import time
+        q, xs, xt = sample
+        best, choice = float("inf"), BLOCK_CANDIDATES[0]
+        for cand in BLOCK_CANDIDATES:
+            fn = lambda: p2p_pallas(q, xs, xt, interpret=False, block_t=cand)
+            jax.block_until_ready(fn())          # compile + warm
+            reps = []
+            for _ in range(3):                   # median rides out one hiccup
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn())
+                reps.append(time.perf_counter() - t0)
+            dt = statistics.median(reps)
+            if dt < best:
+                best, choice = dt, cand
+    _BLOCK_CACHE[key] = choice
+    return choice

@@ -130,6 +130,28 @@ def test_repeat_execution_zero_host_device_transfers():
         phi1[0] = 0.0
 
 
+def test_asarray_hook_must_return_device_array():
+    """DeviceMemo contract (documented on the class): an `asarray=` hook
+    returning a NumPy array would silently re-upload every table on every
+    kernel call — the executors must raise a clear TypeError instead."""
+    from repro.core.fmm import upward_pass
+    from repro.core.multipole import get_operators
+    x, q = _problem(n=300)
+    geo = plan_geometry(x, q, PartitionSpec(nparts=2, ncrit=48))
+
+    def numpy_hook(arr, dtype=None):       # violates the device-array contract
+        return np.asarray(arr, dtype=dtype)
+
+    with pytest.raises(TypeError, match="device array"):
+        api.execute_geometry(geo, asarray=numpy_hook)
+    with pytest.raises(TypeError, match="re-upload"):
+        upward_pass(geo.trees[0], get_operators(geo.p),
+                    sched=geo.scheds[0], asarray=numpy_hook)
+    # the real memo satisfies the contract end to end
+    phi = api.execute_geometry(geo, asarray=api.DeviceMemo())
+    assert np.isfinite(phi).all()
+
+
 def test_device_memo_evicts_replaced_arrays_across_steps():
     """Long-running sessions must not leak device views: arrays replaced by
     a step (positions, multipoles, LET payloads) self-evict from the memo

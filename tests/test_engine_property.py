@@ -1,0 +1,83 @@
+"""Hypothesis property sweep for the batched multi-tree upward pass
+(repro.core.engine): padded multi-tree P2M/M2M must match the per-partition
+reference `upward_pass` for ANY partitioning — ragged depths, ragged sizes,
+ragged leaf widths and empty partitions (a None tree is exactly what the
+empty-partition inf/-inf box sentinel degenerates to in the geometry plan)."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="optional dev dependency (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.distributions import make_distribution
+from repro.core.engine import build_batched_upward, stack_bodies
+from repro.core.engine.upward import batched_upward
+from repro.core.fmm import upward_pass
+from repro.core.multipole import get_operators
+from repro.core.plan import build_tree_schedules
+from repro.core.tree import build_tree
+
+
+@given(st.integers(0, 10_000), st.integers(1, 6), st.integers(16, 64))
+@settings(max_examples=8, deadline=None)
+def test_batched_upward_matches_per_partition(seed, n_parts, ncrit):
+    rng = np.random.default_rng(seed)
+    n = 400
+    x = make_distribution("plummer", n, seed=seed)
+    q = rng.uniform(-1, 1, n)
+    part = rng.integers(0, n_parts, n)
+    if n_parts > 1:
+        part[part == n_parts - 1] = 0      # force at least one empty part
+    trees, scheds = [], []
+    for p in range(n_parts):
+        idx = np.nonzero(part == p)[0]
+        if len(idx) == 0:
+            trees.append(None)
+            scheds.append(None)
+            continue
+        t = build_tree(x[idx], q[idx], ncrit=ncrit)
+        trees.append(t)
+        scheds.append(build_tree_schedules(t))
+    ops = get_operators(4)
+    sched = build_batched_upward(trees, scheds)
+    xp, qp = stack_bodies(trees, sched.n_bodies_max)
+    M = np.asarray(batched_upward(ops, xp, qp, sched))
+    for p, (t, s) in enumerate(zip(trees, scheds)):
+        if t is None:
+            assert not M[p].any()          # empty partition: exactly zero
+            continue
+        ref = np.asarray(upward_pass(t, ops, sched=s))
+        np.testing.assert_allclose(M[p, :ref.shape[0]], ref,
+                                   rtol=1e-6, atol=1e-7)
+
+
+@given(st.integers(0, 5_000))
+@settings(max_examples=6, deadline=None)
+def test_batched_upward_empty_sentinel_partitions(seed):
+    """Partitions made empty by duplicated coordinate clusters (the geometry
+    plan's inf/-inf sentinel case) contribute exactly zero rows."""
+    from repro.core.api import PartitionSpec, plan_geometry
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(0, 1, (4, 3))
+    x = np.repeat(pts, 50, axis=0)
+    q = rng.uniform(-1, 1, len(x))
+    geo = plan_geometry(x, q, PartitionSpec(nparts=8, method="morton",
+                                            ncrit=64))
+    empty = [p for p in range(8) if len(geo.owners[p]) == 0]
+    if not empty:
+        return
+    for p in empty:
+        assert np.all(geo.boxes[p, 0] == np.inf)   # sentinel survives
+        assert np.all(geo.boxes[p, 1] == -np.inf)
+    sched = build_batched_upward(geo.trees, geo.scheds)
+    xp, qp = stack_bodies(geo.trees, sched.n_bodies_max)
+    M = np.asarray(batched_upward(get_operators(geo.p), xp, qp, sched))
+    for p in empty:
+        assert not M[p].any()
+    for p in range(8):
+        if geo.trees[p] is None:
+            continue
+        ref = geo.Ms[p]
+        np.testing.assert_allclose(M[p, :ref.shape[0]], ref,
+                                   rtol=1e-6, atol=1e-7)
