@@ -1,5 +1,6 @@
 """Host-side geometry micro-benchmark: seed loop implementations vs the
-frontier-vectorized traversal/LET passes, plus plan build-once/execute-many.
+frontier-vectorized traversal/LET passes, plus plan build-once/execute-many
+and the device-resident traversal / step-revalidation tiers.
 
 Workload (the ISSUE acceptance case): a 20k-body sphere-surface (boundary)
 distribution at 8 ORB partitions.  For every partition we run the local
@@ -7,8 +8,17 @@ dual traversal and the sender-side LET extraction to the 7 remote boxes —
 once with the retained reference loops, once with the vectorized passes —
 and report the aggregate speedup.  A second pair of rows times building an
 `FMMPlan` vs re-executing it, showing the geometry work a reused plan skips.
+
+Device rows (``--traversal-backend=device`` or always-on comparison rows):
+the `lax.while_loop` + Pallas-MAC traversal of repro.core.engine.traversal
+against the NumPy host loop, and a `FMMSession.step` revalidation microbench
+for the all-partitions-within-slack case — per-partition NumPy loop vs the
+engine's single batched drift launch.  On CPU the device rows run the same
+XLA program an accelerator would compile; treat their absolute times as a
+correctness-costed floor, not the accelerator win itself.
 """
 import os
+import sys
 import time
 
 import numpy as np
@@ -31,8 +41,58 @@ def _time(fn):
     return (time.perf_counter() - t0) * 1e6
 
 
+def _device_traversal_rows(trees, theta, us_host):
+    """Host vs device dual-traversal wall time (warm, all partitions)."""
+    from repro.core.engine.traversal import device_dual_traversal
+    from repro.core.plan import bucket_size
+    pad = bucket_size(max(t.n_cells for t in trees))
+
+    def trav_dev():
+        for t in trees:
+            device_dual_traversal(t, t, theta, pad_cells=pad)
+
+    trav_dev()                  # compile + autotune caps before timing
+    us_dev = _time(trav_dev)
+    return [
+        ("dev_traversal_host", us_host, ""),
+        ("dev_traversal_device", us_dev,
+         f"host/device={us_host / max(us_dev, 1e-9):.2f}x"),
+    ]
+
+
+def _step_revalidation_rows(n, nparts, theta, ncrit):
+    """`FMMSession.step` within-slack revalidation: per-partition NumPy loop
+    (reference session) vs one batched device drift launch (engine session).
+    Positions drift by slack/4 each step, so every partition refreshes and
+    none rebuilds — the hot time-stepping path."""
+    from repro.core.api import FMMSession, PartitionSpec
+    x = make_distribution("sphere", n, seed=3)
+    q = np.random.default_rng(4).uniform(-1, 1, n)
+    spec = PartitionSpec(nparts=nparts, theta=theta, ncrit=ncrit)
+    rows = []
+    rng = np.random.default_rng(5)
+    for label, engine in (("host", False), ("device", True)):
+        sess = FMMSession.from_points(x, q, spec, engine=engine,
+                                      use_kernels=False)
+        sess.evaluate()                         # warm engine + memo
+        eps = float(sess.geometry.slack.min()) / 4
+        steps = [x + rng.uniform(-eps, eps, x.shape) for _ in range(4)]
+        sess.step(steps[0])                     # warm jit of the drift path
+
+        def run_steps(sess=sess, steps=steps):
+            for s in steps[1:]:
+                rep = sess.step(s)
+                assert rep.rebuilt == ()
+
+        us = _time(run_steps) / (len(steps) - 1)
+        rows.append((f"step_revalidate_{label}_n{n}_p{nparts}", us, ""))
+    rows[1] = (rows[1][0], rows[1][1],
+               f"host/device={rows[0][1] / max(rows[1][1], 1e-9):.2f}x")
+    return rows
+
+
 def run(n: int | None = None, nparts: int = 8, theta: float = 0.5,
-        ncrit: int = 64):
+        ncrit: int = 64, traversal_backend: str | None = None):
     n = n or int(os.environ.get("HOST_SIDE_N", 20000))
     x = make_distribution("sphere", n, seed=0)      # boundary distribution
     q = np.random.default_rng(1).uniform(-1, 1, n)
@@ -77,7 +137,7 @@ def run(n: int | None = None, nparts: int = 8, theta: float = 0.5,
     us_exec = _time(lambda: execute_fmm_plan(plan))
 
     speedup = (us_tr + us_lr) / max(us_tv + us_lv, 1e-9)
-    return [
+    rows = [
         (f"host_traversal_ref_n{n}_p{nparts}", us_tr, ""),
         (f"host_traversal_vec_n{n}_p{nparts}", us_tv,
          f"speedup={us_tr / max(us_tv, 1e-9):.1f}x"),
@@ -89,8 +149,19 @@ def run(n: int | None = None, nparts: int = 8, theta: float = 0.5,
         (f"fmm_plan_build_n{n}", us_build, "traversal+padding+schedules"),
         (f"fmm_plan_execute_n{n}", us_exec, "kernels+gathers only"),
     ]
+    backend = (traversal_backend
+               or os.environ.get("HOST_SIDE_TRAVERSAL", "host"))
+    if backend == "device":
+        rows += _device_traversal_rows(trees, theta, us_tv)
+        rows += _step_revalidation_rows(min(n, 6000), min(nparts, 4), theta,
+                                        ncrit)
+    return rows
 
 
 if __name__ == "__main__":
-    for name, us, derived in run():
+    backend = None
+    for a in sys.argv[1:]:
+        if a.startswith("--traversal-backend="):
+            backend = a.split("=", 1)[1]
+    for name, us, derived in run(traversal_backend=backend):
         print(f"{name},{us:.1f},{derived}")

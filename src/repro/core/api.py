@@ -93,13 +93,19 @@ _EMPTY_LO, _EMPTY_HI = np.inf, -np.inf      # empty-partition box sentinel
 @dataclass(frozen=True)
 class PartitionSpec:
     """Protocol-independent geometry parameters: everything `plan_geometry`
-    needs, and nothing `schedule_comm` cares about."""
+    needs, and nothing `schedule_comm` cares about.
+
+    `traversal_backend`: where dual traversal + MAC margin scoring run —
+    "host" (NumPy frontier reference), "device" (lax.while_loop + Pallas MAC
+    kernel, repro.core.engine.traversal), or None/"auto" (device whenever an
+    accelerator backend is present, host on CPU)."""
     nparts: int = 8
     method: str = "orb"          # "orb" | "hilbert" | "morton"
     theta: float = 0.5
     ncrit: int = 64
     p: int = 4
     sfc_box_inflation: float = DEFAULT_SFC_BOX_INFLATION
+    traversal_backend: str | None = None
 
 
 @dataclass
@@ -338,11 +344,43 @@ def _slack_budget(nparts: int, theta: float, receivers: list,
     return np.maximum(margin, 0.0) / (2.0 * math.sqrt(3.0) * (1.0 + theta))
 
 
-def _remote_block(i: int, let: LETData, tree, theta: float) -> RemoteBlock:
+def _geometry_pad_cells(trees) -> int | None:
+    """One padded-cell envelope for every traversal of a geometry, so all
+    (receiver, sender) pairs share a single traced device program (grafted
+    LETs never exceed their sender's cell count)."""
+    live = [t.n_cells for t in trees if t is not None]
+    if not live:
+        return None
+    from repro.core.plan import bucket_size
+    return bucket_size(max(live))
+
+
+def _plan_pair(tgt, src, theta: float, with_m2p: bool, backend: str,
+               pad_cells: int | None = None):
+    """Traverse one (target, source) pair on the chosen backend and freeze
+    its interaction plan; returns (inter, min accepted M2L margin).  The
+    device path consumes the traversal's own margin output — no host NumPy
+    margin recompute (`_m2l_margin` stays the host-path scorer)."""
+    if backend == "device":
+        from repro.core.engine.traversal import device_dual_traversal
+        m2l, p2p, m2p, margin = device_dual_traversal(
+            tgt, src, theta, with_m2p=True, pad_cells=pad_cells)
+        assert with_m2p or len(m2p) == 0, \
+            "truncated source cells require with_m2p=True"
+        inter = build_interaction_plan(
+            tgt, src, theta, with_m2p=with_m2p, m2l_pairs=m2l, p2p_pairs=p2p,
+            m2p_pairs=(m2p if with_m2p else None))
+        return inter, float(margin)
+    inter = build_interaction_plan(tgt, src, theta, with_m2p=with_m2p)
+    return inter, _m2l_margin(inter, tgt, src, theta)
+
+
+def _remote_block(i: int, let: LETData, tree, theta: float,
+                  backend: str = "host",
+                  pad_cells: int | None = None) -> RemoteBlock:
     g = graft(let)
-    inter = build_interaction_plan(tree, g, theta, with_m2p=True)
-    return RemoteBlock(sender=i, graft=g, inter=inter,
-                       margin=_m2l_margin(inter, tree, g, theta))
+    inter, margin = _plan_pair(tree, g, theta, True, backend, pad_cells)
+    return RemoteBlock(sender=i, graft=g, inter=inter, margin=margin)
 
 
 def _rebind_remote(rb: RemoteBlock, let: LETData) -> RemoteBlock:
@@ -360,6 +398,8 @@ def plan_geometry(x, q, spec: PartitionSpec | None = None,
     protocol argument.  Keyword overrides patch the spec:
     `plan_geometry(x, q, nparts=16, method="hilbert")`."""
     spec = dc_replace(spec or PartitionSpec(), **overrides)
+    from repro.core.engine.traversal import resolve_traversal_backend
+    backend = resolve_traversal_backend(spec.traversal_backend)
     x = np.asarray(x, dtype=np.float64)
     q = np.asarray(q, dtype=np.float64)
     n = len(x)
@@ -401,18 +441,21 @@ def plan_geometry(x, q, spec: PartitionSpec | None = None,
             B[i, j] = let.nbytes
 
     # --- receiver side: graft + traverse ONCE into frozen plans ------------
+    pad_cells = _geometry_pad_cells(trees)
     receivers: list = []
     for j in range(P):
         if trees[j] is None:
             receivers.append(None)
             continue
         t = trees[j]
-        local = build_interaction_plan(t, t, spec.theta)
-        remote = [_remote_block(i, lets[(i, j)], t, spec.theta)
+        local, local_margin = _plan_pair(t, t, spec.theta, False, backend,
+                                         pad_cells)
+        remote = [_remote_block(i, lets[(i, j)], t, spec.theta, backend,
+                                pad_cells)
                   for i in range(P) if (i, j) in lets]
         receivers.append(ReceiverPlan(
             tree=t, sched=scheds[j], local=local,
-            local_margin=_m2l_margin(local, t, t, spec.theta), remote=remote))
+            local_margin=local_margin, remote=remote))
 
     adj = adjacency_from_boxes(adj_boxes)
     deg = float(np.max([len(a) for a in adj]))
@@ -673,21 +716,42 @@ class FMMSession:
         if new_x.shape != (geo.n, 3):
             raise ValueError(f"step: expected positions {(geo.n, 3)}, "
                              f"got {new_x.shape}")
+        q_unchanged = new_q is None
         new_q = geo.q0 if new_q is None else np.array(new_q, dtype=np.float64)
         if new_q.shape != (geo.n,):
             raise ValueError(f"step: expected charges {(geo.n,)}, "
                              f"got {new_q.shape}")
+        q_unchanged = q_unchanged or np.array_equal(new_q, geo.q0)
 
-        delta = np.zeros(P)                 # drift vs structure reference
-        stale = np.zeros(P, dtype=bool)     # numeric payload out of date
-        for j in range(P):
-            idx = geo.owners[j]
-            if len(idx) == 0:
-                continue
-            delta[j] = math.sqrt(float(
-                ((new_x[idx] - geo.x_ref[idx]) ** 2).sum(axis=1).max()))
-            stale[j] = (not np.array_equal(new_x[idx], geo.x0[idx])
-                        or not np.array_equal(new_q[idx], geo.q0[idx]))
+        # Batched device revalidation: a warm engine scores every partition's
+        # drift (and changed flag) in ONE launch from a single new_x upload —
+        # the per-partition NumPy loop below is the host/reference path.  The
+        # restacked device payload is reused as the next evaluation's payload.
+        eng = (self._engine
+               if self.engine_enabled and self._engine is not None
+               and self._engine.geo is geo else None)
+        use_dev = eng is not None and q_unchanged
+        if use_dev:
+            delta, stale = eng.step_drift(new_x)
+            if np.any(stale & (delta > geo.slack - eng.drift_guard)):
+                # a rebuild is coming OR a drift sits within the f32 guard
+                # band of its slack: recompute drifts exactly (f64) on the
+                # host — rebuild decisions and the conservative LET
+                # re-extraction boxes must not ride f32 rounding
+                use_dev = False
+        if not use_dev:
+            if eng is not None:
+                eng.discard_pending()
+            delta = np.zeros(P)             # drift vs structure reference
+            stale = np.zeros(P, dtype=bool)  # numeric payload out of date
+            for j in range(P):
+                idx = geo.owners[j]
+                if len(idx) == 0:
+                    continue
+                delta[j] = math.sqrt(float(
+                    ((new_x[idx] - geo.x_ref[idx]) ** 2).sum(axis=1).max()))
+                stale[j] = (not np.array_equal(new_x[idx], geo.x0[idx])
+                            or not np.array_equal(new_q[idx], geo.q0[idx]))
 
         rebuilt = tuple(int(j) for j in range(P)
                         if stale[j] and delta[j] > geo.slack[j])
@@ -699,6 +763,8 @@ class FMMSession:
                             slack=tuple(geo.slack.tolist()),
                             version=geo.version + bool(rebuilt or refreshed))
         if report.cache_hit:
+            if eng is not None:
+                eng.discard_pending()
             return report
 
         # Engine-backed sessions keep within-slack refreshes device-resident:
@@ -715,7 +781,7 @@ class FMMSession:
             self._comm_cache.clear()
             self._engine = None             # structure changed: tables stale
         elif self._engine is not None:
-            self._engine.refresh_payload(self._geo)
+            self._engine.refresh_payload(self._geo, use_pending=use_dev)
         return report
 
     @staticmethod
@@ -723,6 +789,8 @@ class FMMSession:
                  rebuilt: set, refreshed: set,
                  defer_numeric: bool = False) -> GeometryPlan:
         spec = geo.spec
+        from repro.core.engine.traversal import resolve_traversal_backend
+        backend = resolve_traversal_backend(spec.traversal_backend)
         P = spec.nparts
         ops = get_operators(spec.p)
         touched = rebuilt | refreshed
@@ -792,6 +860,7 @@ class FMMSession:
         #    re-graft (cheap view) iff its LET payload was rebound (deferred
         #    with the payload itself under engine dispatch)
         receivers = list(geo.receivers)
+        pad_cells = _geometry_pad_cells(trees) if rebuilt else None
         for j in range(P) if not defer_numeric else ():
             if trees[j] is None:
                 continue
@@ -804,14 +873,15 @@ class FMMSession:
             for i in senders:
                 if i in rebuilt or j in rebuilt:
                     remote.append(_remote_block(i, lets[(i, j)], trees[j],
-                                                spec.theta))
+                                                spec.theta, backend,
+                                                pad_cells))
                 elif i in touched:
                     remote.append(_rebind_remote(old[i], lets[(i, j)]))
                 else:
                     remote.append(old[i])
             if j in rebuilt:
-                local = build_interaction_plan(trees[j], trees[j], spec.theta)
-                lm = _m2l_margin(local, trees[j], trees[j], spec.theta)
+                local, lm = _plan_pair(trees[j], trees[j], spec.theta, False,
+                                       backend, pad_cells)
             else:
                 local, lm = r.local, r.local_margin
             receivers[j] = ReceiverPlan(tree=trees[j], sched=scheds[j],

@@ -38,7 +38,13 @@ from repro.core.engine.m2l import far_tail_kernel, m2p_vals_kernel
 from repro.core.engine.p2p import p2p_bucket_vals
 from repro.core.engine.schedules import (BatchedUpwardSchedule, EngineTables,
                                          build_batched_upward,
-                                         build_engine_tables, stack_bodies)
+                                         build_engine_tables, stack_bodies,
+                                         stack_reference_bodies)
+from repro.core.engine.traversal import (default_traversal_backend,
+                                         device_dual_traversal,
+                                         partition_drift,
+                                         resolve_traversal_backend,
+                                         restack_payload)
 from repro.core.engine.upward import batched_upward, batched_upward_kernel
 from repro.core.fmm import device_hook
 from repro.core.multipole import get_operators
@@ -46,7 +52,9 @@ from repro.core.multipole import get_operators
 __all__ = ["DeviceEngine", "EngineTables", "BatchedUpwardSchedule",
            "build_engine_tables", "build_batched_upward", "batched_upward",
            "batched_upward_kernel", "stack_bodies", "default_engine_enabled",
-           "default_use_kernels"]
+           "default_use_kernels", "default_traversal_backend",
+           "resolve_traversal_backend", "device_dual_traversal",
+           "partition_drift", "restack_payload"]
 
 
 def default_engine_enabled() -> bool:
@@ -94,18 +102,60 @@ class DeviceEngine:
                                                 self.tables.n_bodies_max)
         self._ops = get_operators(geometry.p)
         self._M = None               # cached device multipoles (P, Cmax, nk)
+        self._x_ref_pad = None       # stacked slack reference, built lazily
+        self._pending_x_pad = None   # device payload staged by step_drift
         self.payload_refreshes = 0
+        # f32 guard band for drift-vs-slack decisions: step_drift measures in
+        # f32 (inputs rounded before subtraction), so its absolute error is
+        # a few ulps of the coordinate scale.  Decisions within the band must
+        # fall back to the exact f64 host revalidation (api.FMMSession.step).
+        self.drift_guard = float(4 * np.finfo(np.float32).eps
+                                 * max(np.abs(geometry.x_ref).max(), 1.0))
 
     # ----------------------------------------------------------- payload --
-    def refresh_payload(self, geometry) -> None:
+    def refresh_payload(self, geometry, *, use_pending: bool = False) -> None:
         """Rebind to a same-structure geometry (within-slack step): restack
         the (x, q) payload and invalidate cached device multipoles.  Index
-        tables — and their memoized device views — are reused untouched."""
+        tables — and their memoized device views — are reused untouched.
+
+        With `use_pending=True` the device payload staged by the last
+        `step_drift` call becomes the new x payload directly — the host never
+        restacks and the step's only host->device transfer was `new_x` (the
+        session guarantees q is unchanged on this path)."""
         self.geo = geometry
-        self._x_pad, self._q_pad = stack_bodies(geometry.trees,
-                                                self.tables.n_bodies_max)
+        if use_pending and self._pending_x_pad is not None:
+            self._x_pad = self._pending_x_pad
+        else:
+            self._x_pad, self._q_pad = stack_bodies(geometry.trees,
+                                                    self.tables.n_bodies_max)
+        self._pending_x_pad = None
         self._M = None
         self.payload_refreshes += 1
+
+    def discard_pending(self) -> None:
+        self._pending_x_pad = None
+
+    def step_drift(self, new_x) -> tuple:
+        """Batched MAC-slack revalidation: upload `new_x` ONCE, restack it
+        into the (P, Nmax, 3) payload envelope on device through the frozen
+        global-id tables, and reduce every partition's drift (vs the slack
+        reference `x_ref`) and changed flag (vs the current payload) in one
+        launch — replacing the session's per-partition NumPy loop.  The
+        restacked payload is staged for `refresh_payload(use_pending=True)`.
+
+        Returns (drift (P,) float64, changed (P,) bool) host arrays."""
+        t = self.tables
+        aa = self._aa
+        if self._x_ref_pad is None:
+            self._x_ref_pad = stack_reference_bodies(self.geo, t)
+        xd = aa(new_x, jnp.float32)
+        x_pad = restack_payload(xd, aa(t.orig_idx), aa(t.flat_idx),
+                                t.n_parts, t.n_bodies_max)
+        drift, changed = partition_drift(x_pad, aa(self._x_ref_pad),
+                                         aa(self._x_pad, jnp.float32))
+        self._pending_x_pad = x_pad
+        return (np.asarray(drift, np.float64),
+                np.asarray(changed, bool))
 
     # ------------------------------------------------------------ passes --
     def upward(self):
@@ -115,8 +165,9 @@ class DeviceEngine:
                                      self.tables.up, asarray=self.memo)
         return self._M
 
-    def evaluate(self) -> np.ndarray:
-        """Full potential in original body order (float64, host)."""
+    def _phase_values(self):
+        """Run the three batched phases; yields (idx, valid, vals) value
+        tables (device f32) for the final accumulation."""
         t = self.tables
         aa = self._aa
         M = self.upward()
@@ -130,27 +181,57 @@ class DeviceEngine:
             aa(ut["down_ids"]), aa(ut["down_parents"]), aa(ut["down_mask"]),
             aa(ut["down_d"]), aa(ut["leaves"]), aa(ut["leaf_mask"]),
             aa(ut["leaf_centers"]), aa(ut["leaf_idx"]))
-
-        phi_flat = np.zeros(t.n_parts * t.n_bodies_max)
-        np.add.at(phi_flat, t.l2p_t_idx.ravel(),
-                  np.where(ut["leaf_valid"].ravel(),
-                           np.asarray(l2p_vals, np.float64).ravel(), 0.0))
+        yield t.l2p_t_idx, ut["leaf_valid"], l2p_vals
 
         for bucket in t.p2p_buckets:
             vals = p2p_bucket_vals(x, q, bucket, use_kernels=self.use_kernels,
-                                   interpret=self.interpret, asarray=self.memo)
-            np.add.at(phi_flat, bucket["t_idx"].ravel(),
-                      np.where(bucket["t_valid"].ravel(),
-                               vals.astype(np.float64).ravel(), 0.0))
+                                   interpret=self.interpret, asarray=self.memo,
+                                   to_host=False)
+            yield bucket["t_idx"], bucket["t_valid"], vals
 
         if t.m2p["b"].shape[0]:
             vals = m2p_vals_kernel(self._ops, M, x, aa(t.m2p["b"]),
                                    aa(t.m2p["centers"]), aa(t.m2p["mask"]),
                                    aa(t.m2p["t_idx"]))
-            np.add.at(phi_flat, t.m2p["t_idx"].ravel(),
-                      np.where(t.m2p["t_valid"].ravel(),
-                               np.asarray(vals, np.float64).ravel(), 0.0))
+            yield t.m2p["t_idx"], t.m2p["t_valid"], vals
 
+    def evaluate_device(self) -> jnp.ndarray:
+        """Full potential in original body order as ONE device (N,) float64
+        array — the whole pipeline from payload to potentials stays on the
+        accelerator.  Requires x64 on the backend (jax_enable_x64): without
+        it the f64 segment sums would silently truncate to f32, so this
+        raises instead (the host accumulation path keeps f64 precision when
+        x64 is off)."""
+        if not jax.config.jax_enable_x64:
+            raise RuntimeError(
+                "evaluate_device requires jax_enable_x64 (device f64 "
+                "accumulation); use evaluate() for host f64 accumulation")
+        t = self.tables
+        aa = self._aa
+        phi_flat = jnp.zeros(t.n_parts * t.n_bodies_max, jnp.float64)
+        for idx, valid, vals in self._phase_values():
+            contrib = jnp.where(aa(valid).ravel(),
+                                vals.astype(jnp.float64).ravel(), 0.0)
+            phi_flat = phi_flat.at[aa(idx).ravel()].add(contrib)
+        return (jnp.zeros(t.n, jnp.float64)
+                .at[aa(t.orig_idx)].set(phi_flat[aa(t.flat_idx)]))
+
+    def evaluate(self) -> np.ndarray:
+        """Full potential in original body order (float64, host).
+
+        With x64 enabled on the backend, the f64 accumulation itself runs on
+        device (`evaluate_device`) and the only host transfer is the final
+        (N,) potential; otherwise each phase's padded f32 value tables are
+        accumulated in host float64 (identical precision to the reference
+        executors, which is what pins the engine against them)."""
+        if jax.config.jax_enable_x64:
+            return np.asarray(self.evaluate_device())
+        t = self.tables
+        phi_flat = np.zeros(t.n_parts * t.n_bodies_max)
+        for idx, valid, vals in self._phase_values():
+            np.add.at(phi_flat, np.asarray(idx).ravel(),
+                      np.where(np.asarray(valid).ravel(),
+                               np.asarray(vals, np.float64).ravel(), 0.0))
         phi = np.zeros(t.n)
         phi[t.orig_idx] = phi_flat[t.flat_idx]
         return phi

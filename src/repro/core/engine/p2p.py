@@ -35,13 +35,20 @@ def _gather_bucket(x, q, t_idx, s_idx, s_valid):
 
 
 def p2p_bucket_vals(x, q, bucket, use_kernels: bool = False,
-                    interpret: bool | None = None, asarray=None) -> np.ndarray:
-    """Evaluate one width-class bucket -> (B, wt) f32 host values (masked)."""
+                    interpret: bool | None = None, asarray=None,
+                    to_host: bool = True):
+    """Evaluate one width-class bucket -> (B, wt) f32 masked values.
+
+    `to_host=True` (default) returns a NumPy array for the host f64
+    accumulation; `to_host=False` keeps the values device-resident for the
+    engine's x64 on-device accumulation (no round-trip)."""
     aa = device_hook(asarray)
     xt, xs, qs = _gather_bucket(x, q, aa(bucket["t_idx"]), aa(bucket["s_idx"]),
                                 aa(bucket["s_valid"]))
     if use_kernels:
         from repro.kernels.ops import p2p_auto
-        vals = np.asarray(p2p_auto(qs, xs, xt, interpret=interpret))
-        return vals * bucket["mask"][:, None]
-    return np.asarray(_p2p_vals(xt, xs, qs, aa(bucket["mask"])))
+        vals = p2p_auto(qs, xs, xt, interpret=interpret) \
+            * aa(bucket["mask"])[:, None]
+    else:
+        vals = _p2p_vals(xt, xs, qs, aa(bucket["mask"]))
+    return np.asarray(vals) if to_host else vals

@@ -26,6 +26,13 @@ Conventions shared by every stacked table:
     via `LETData.cell_src` / `body_src`: the engine never materializes a LET
     payload on the host — remote M2L/M2P/P2P read the sender's device-resident
     multipoles and bodies directly.
+  - Pair arrays may arrive as device (jax) arrays — e.g. from the device
+    traversal tier — every builder funnels through `np.asarray`, paying at
+    most one readback per table build (tables are then frozen for the
+    geometry's lifetime).  Conversely `stack_reference_bodies` +
+    `engine.traversal.restack_payload` keep the per-timestep payload path
+    device-side: a step uploads new_x once and the stacked envelope is
+    produced by an on-device scatter, never a host restack.
 """
 from __future__ import annotations
 
@@ -36,7 +43,7 @@ import numpy as np
 from repro.core.plan import bucket_size
 
 __all__ = ["BatchedUpwardSchedule", "EngineTables", "build_batched_upward",
-           "build_engine_tables", "stack_bodies"]
+           "build_engine_tables", "stack_bodies", "stack_reference_bodies"]
 
 
 # ---------------------------------------------------------------- helpers --
@@ -167,6 +174,17 @@ def stack_bodies(trees, n_bodies_max: int):
         x_pad[p, :len(t.x)] = t.x
         q_pad[p, :len(t.q)] = t.q
     return x_pad, q_pad
+
+
+def stack_reference_bodies(geo, tables) -> np.ndarray:
+    """Stack the geometry's slack-reference positions `x_ref` into the
+    payload envelope `(P, Nmax, 3) f32` through the frozen orig->flat gather
+    tables.  Built once per engine (x_ref only changes on rebuild, which
+    rebuilds the engine): the frozen device view of this array is one leg of
+    the batched step-drift revalidation launch."""
+    ref = np.zeros((tables.n_parts * tables.n_bodies_max, 3), np.float32)
+    ref[tables.flat_idx] = geo.x_ref[tables.orig_idx]
+    return ref.reshape(tables.n_parts, tables.n_bodies_max, 3)
 
 
 def _let_bookkeeping(let):

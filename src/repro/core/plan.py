@@ -3,18 +3,28 @@
 Architecture: plan -> schedule -> engine
 ----------------------------------------
 Every FMM evaluation decomposes into two very different kinds of work —
-**plan construction** (this module, pure NumPy: dual-tree traversal,
-pair-list padding and bucketing, leaf body-gather index tables, per-level
-upward/downward schedules) and **plan execution** (JAX kernels gathering
-through the precomputed index tables with no list construction and no
-padding work).  Execution itself now comes in two tiers: the per-tree
-*reference* executors (`fmm.execute_fmm_plan` and the `*_pass` functions,
-one launch per tree per pass) and the *batched device engine*
-(repro.core.engine), which stacks every partition's frozen tables into
-`(n_parts, ...)` envelopes and runs each phase for the whole geometry in a
-single launch — one vmapped multi-tree upward pass, one segment-summed M2L
-over all (receiver, sender) pairs, and Pallas-bucketed P2P with autotuned
-block sizes.
+**plan construction** (this module: dual-tree traversal, pair-list padding
+and bucketing, leaf body-gather index tables, per-level upward/downward
+schedules) and **plan execution** (JAX kernels gathering through the
+precomputed index tables with no list construction and no padding work).
+Execution comes in two tiers: the per-tree *reference* executors
+(`fmm.execute_fmm_plan` and the `*_pass` functions, one launch per tree per
+pass) and the *batched device engine* (repro.core.engine), which stacks
+every partition's frozen tables into `(n_parts, ...)` envelopes and runs
+each phase for the whole geometry in a single launch — one vmapped
+multi-tree upward pass, one segment-summed M2L over all (receiver, sender)
+pairs, and Pallas-bucketed P2P with autotuned block sizes.
+
+Since the device-resident traversal tier (engine/traversal.py), plan
+*construction* itself is backend-split: `traversal_backend="device"` runs
+the dual-traversal frontier loop as one `jax.lax.while_loop` program with a
+Pallas MAC kernel scoring whole frontiers per launch — emitting the exact
+pair lists (same order, same sets) the NumPy reference produces, plus the
+minimum accepted-M2L margin the MAC-slack revalidation consumes.  The host
+loop in core/traversal.py survives as the f64 *reference*: it is the CPU
+default, the precision anchor the f32 device decisions are golden-tested
+against, and the fallback wherever no accelerator exists.  Padding,
+bucketing and gather-table construction stay NumPy here either way.
 
 The distributed pipeline composes those tiers (repro.core.api), one per
 independent axis of the paper plus the hardware floor:
@@ -22,9 +32,9 @@ independent axis of the paper plus the hardware floor:
   1. `plan_geometry(x, q, PartitionSpec) -> GeometryPlan` — partitioning,
      completely local trees, batched sender-side LET extraction and every
      receiver's frozen `InteractionPlan`s, built ONCE with no protocol
-     argument.  This is the expensive host-side geometry work, and exactly
-     the "communication metadata" Kailasa et al. precompute before any
-     evaluation.
+     argument.  This is the expensive geometry work — traversal on the
+     accelerator when one is present — and exactly the "communication
+     metadata" Kailasa et al. precompute before any evaluation.
   2. `schedule_comm(geometry, protocol, ...) -> CommSchedule` — a cheap pure
      function over the frozen bytes matrix and Lemma-1 adjacency boxes
      (protocols.py), so sweeping all four exchange protocols reuses one
@@ -32,9 +42,12 @@ independent axis of the paper plus the hardware floor:
   3. `engine.DeviceEngine(geometry)` — the execution tier: payload-
      independent stacked index tables compiled once per geometry, LET
      indices translated to sender-global device ids (no LET payload ever
-     materializes on the host), float64 accumulation only at the API
-     boundary.  Within-slack timesteps rebind ONE stacked (x, q) payload
-     pair and recompute every drifting partition's multipoles on device.
+     materializes on the host).  Within-slack timesteps upload ONE new_x
+     array, revalidate every partition's MAC slack in one batched drift
+     launch, adopt the device-restacked payload, and recompute drifting
+     multipoles on device.  With x64 enabled the f64 phi accumulation also
+     stays on device and returns a single (N,) array; otherwise f64
+     accumulation happens once on the host at the API boundary.
   4. `FMMSession` — orchestration: memoized device views, protocol sweeps
      from a single evaluation, `.step(new_x)` MAC-slack revalidation that
      rebuilds only invalidated partitions, and engine/reference dispatch
@@ -43,8 +56,8 @@ independent axis of the paper plus the hardware floor:
 A plan is built once and executed many times — time-stepped N-body where
 geometry changes slowly, or protocol sweeps over the same partitioning —
 which is what makes the host side disappear from the hot path.  All plan
-dataclasses are frozen: a plan is immutable geometry metadata.  This module
-stays NumPy-only; device residency is the session/engine concern
+dataclasses are frozen: a plan is immutable geometry metadata.  Device
+residency of the frozen tables is the session/engine concern
 (api.DeviceMemo threads through the executors' `asarray` hook, and the
 engine's stacked tables ride the same memo).
 
@@ -70,6 +83,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core.traversal import dual_traversal
+from repro.core.tree import bucket_size
 
 __all__ = [
     "P2PBlock", "InteractionPlan", "LevelSchedule", "TreeSchedules", "FMMPlan",
@@ -82,14 +96,8 @@ _EMPTY_PAIRS = np.zeros((0, 2), dtype=np.int64)
 
 
 # ------------------------------------------------------- padding helpers ---
-def bucket_size(n: int, lo: int = 16) -> int:
-    """Smallest power-of-two >= n (at least `lo`) — shared JIT cache shapes."""
-    b = lo
-    while b < n:
-        b *= 2
-    return b
-
-
+# bucket_size lives in tree.py (one power-of-two rule for plan padding and
+# device cell tables alike) and is re-exported here for its historic callers.
 def pad_pairs(pairs: np.ndarray):
     """Pad a (n, 2) pair list to a power-of-2 bucket.  Padding replicates the
     first pair: indices stay valid (root cells can be huge) and M2L
@@ -231,11 +239,24 @@ def build_p2p_blocks(tgt_tree, src_tree, pairs: np.ndarray,
 def build_interaction_plan(tgt_tree, src_tree, theta: float = 0.5,
                            with_m2p: bool = False,
                            m2l_pairs=None, p2p_pairs=None,
-                           m2p_pairs=None) -> InteractionPlan:
+                           m2p_pairs=None,
+                           traversal_backend: str | None = None) -> InteractionPlan:
     """Traverse (unless pair lists are supplied) and freeze the padded /
-    bucketed interaction lists for one (target, source) tree pair."""
+    bucketed interaction lists for one (target, source) tree pair.
+
+    `traversal_backend` selects where the dual traversal runs: "host" (the
+    NumPy frontier reference, the default on CPU), "device" (the
+    `jax.lax.while_loop` + Pallas MAC program of repro.core.engine.traversal,
+    the default on accelerator backends), or None/"auto"."""
     if m2l_pairs is None or p2p_pairs is None:
-        if with_m2p:
+        from repro.core.engine.traversal import resolve_traversal_backend
+        if resolve_traversal_backend(traversal_backend) == "device":
+            from repro.core.engine.traversal import device_dual_traversal
+            m2l_pairs, p2p_pairs, m2p_d, _ = device_dual_traversal(
+                tgt_tree, src_tree, theta, with_m2p=with_m2p)
+            if with_m2p:
+                m2p_pairs = m2p_d
+        elif with_m2p:
             m2l_pairs, p2p_pairs, m2p_pairs = dual_traversal(
                 tgt_tree, src_tree, theta, with_m2p=True)
         else:
@@ -300,11 +321,13 @@ def build_tree_schedules(tree) -> TreeSchedules:
 
 def build_fmm_plan(tgt_tree, src_tree, theta: float = 0.5, p: int = 4,
                    with_m2p: bool = False,
-                   m2l_pairs=None, p2p_pairs=None, m2p_pairs=None) -> FMMPlan:
+                   m2l_pairs=None, p2p_pairs=None, m2p_pairs=None,
+                   traversal_backend: str | None = None) -> FMMPlan:
     """Build the full plan for evaluating src_tree -> tgt_tree."""
     interactions = build_interaction_plan(
         tgt_tree, src_tree, theta=theta, with_m2p=with_m2p,
-        m2l_pairs=m2l_pairs, p2p_pairs=p2p_pairs, m2p_pairs=m2p_pairs)
+        m2l_pairs=m2l_pairs, p2p_pairs=p2p_pairs, m2p_pairs=m2p_pairs,
+        traversal_backend=traversal_backend)
     tgt_sched = build_tree_schedules(tgt_tree)
     if src_tree is tgt_tree:
         src_sched = tgt_sched

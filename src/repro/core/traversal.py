@@ -17,6 +17,16 @@ The seed's per-pair stack version is retained as
 produce identical pair *sets* by golden tests (ordering differs: stack vs
 generation order).
 
+This module is now the **host reference** tier of a two-backend traversal:
+`repro.core.engine.traversal.device_dual_traversal` runs the same frontier
+loop as a single `jax.lax.while_loop` device program (Pallas MAC scoring,
+exact host emission order) and is the default wherever an accelerator
+backend is present (`PartitionSpec(traversal_backend=...)`).  This f64
+NumPy loop stays authoritative: it is the precision anchor the f32 device
+decisions are golden-tested against (byte-identical pair lists on
+MAC-robust inputs — tests/test_traversal_device*.py), the CPU default, and
+the fallback when no accelerator exists.
+
 Host-side NumPy; outputs are flat pair lists consumed by the JAX evaluator.
 """
 from __future__ import annotations

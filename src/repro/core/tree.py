@@ -28,7 +28,17 @@ import numpy as np
 
 from repro.core.partition.sfc import morton_encode
 
-__all__ = ["Tree", "build_tree"]
+__all__ = ["Tree", "build_tree", "bucket_size", "flat_cell_tables"]
+
+
+def bucket_size(n: int, lo: int = 16) -> int:
+    """Smallest power-of-two >= n (at least `lo`) — shared JIT cache shapes.
+    Lives here (the bottom layer) so both the plan padding and the device
+    cell-table padding round with ONE rule; re-exported by plan.py."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
 
 
 @dataclass
@@ -67,6 +77,10 @@ class Tree:
         """Cell ids grouped by level, deepest first (for the upward pass)."""
         for lvl in range(self.level.max(), -1, -1):
             yield np.nonzero(self.level == lvl)[0]
+
+    def device_tables(self, pad_cells: int | None = None) -> dict:
+        """Device-friendly flat cell tables (see `flat_cell_tables`)."""
+        return flat_cell_tables(self, pad_cells=pad_cells)
 
     def padded_leaf_bodies(self):
         """(n_leaf, ncrit) body indices padded with -1, aligned with .leaves."""
@@ -107,6 +121,42 @@ def _segmented_arange(counts: np.ndarray) -> np.ndarray:
         return np.zeros(0, dtype=np.int64)
     return (np.arange(total, dtype=np.int64)
             - np.repeat(np.cumsum(counts) - counts, counts))
+
+
+def flat_cell_tables(tree, pad_cells: int | None = None) -> dict:
+    """Flat per-cell tables the device traversal consumes in one gather each.
+
+    Works for any tree-like object (Tree or a grafted LET view): the MAC
+    frontier loop only needs center/radius for scoring, child_start/n_child
+    for expansion, and is_leaf/truncated for classification.  Cell counts are
+    padded to a power of two (`pad_cells` overrides) so trees of similar size
+    share one traced traversal program; padded slots are inert leaves
+    (radius 0, no children, never reached by valid frontier entries).
+
+    dtypes are the device convention: f32 geometry, i32 structure — the f64
+    host arrays stay the traversal *reference* (core.traversal).
+    """
+    C = len(np.asarray(tree.radius))
+    Cpad = pad_cells or bucket_size(max(C, 1))
+    if Cpad < C:
+        raise ValueError(f"pad_cells={Cpad} < {C} cells")
+    center = np.zeros((Cpad, 3), np.float32)
+    radius = np.zeros(Cpad, np.float32)
+    child_start = np.zeros(Cpad, np.int32)
+    n_child = np.zeros(Cpad, np.int32)
+    is_leaf = np.ones(Cpad, bool)
+    truncated = np.zeros(Cpad, bool)
+    center[:C] = np.asarray(tree.center, np.float32)
+    radius[:C] = np.asarray(tree.radius, np.float32)
+    child_start[:C] = np.asarray(tree.child_start, np.int32)
+    n_child[:C] = np.asarray(tree.n_child, np.int32)
+    is_leaf[:C] = np.asarray(tree.is_leaf, bool)
+    t = getattr(tree, "truncated", None)
+    if t is not None:
+        truncated[:C] = np.asarray(t, bool)
+    return {"center": center, "radius": radius, "child_start": child_start,
+            "n_child": n_child, "is_leaf": is_leaf, "truncated": truncated,
+            "n_cells": C}
 
 
 def build_tree(x: np.ndarray, q: np.ndarray, ncrit: int = 64,

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: batched MAC (multipole acceptance criterion) scoring.
+
+The dual-tree traversal's only floating-point work is the acceptance test
+
+    margin = theta * |c_A - c_B| - (R_A + R_B)        (accepted iff > 0)
+
+evaluated for every undecided (target, source) cell pair of a frontier
+generation.  The device traversal (repro.core.engine.traversal) keeps whole
+frontiers in padded `(K,)` arrays, so the score is one lane-parallel launch:
+coordinates arrive structure-of-arrays (3, K) — the same VPU-friendly layout
+as the P2P kernel — and each grid step scores a 128-lane tile of pairs.
+
+The margin doubles as the traversal's *slack* output: the minimum margin over
+accepted M2L pairs is exactly the quantity `api._m2l_margin` recomputes on
+the host for `FMMSession.step` MAC-slack revalidation, so the device
+traversal returns it for free.
+
+`mac_margins` is trace-safe (no jit of its own): the engine calls it from
+inside a `jax.lax.while_loop` body.  `theta` is a Python float baked into the
+kernel closure — one compile per theta, shared across every frontier
+generation, tree pair and partition.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["mac_margins", "mac_margins_ref", "MAC_BLOCK"]
+
+MAC_BLOCK = 128                 # lane-aligned pair tile
+
+
+def _mac_kernel(theta, ca_ref, ra_ref, cb_ref, rb_ref, out_ref):
+    # blocks: ca/cb (1, 3, block); ra/rb/out (1, block)
+    ca = ca_ref[0]
+    cb = cb_ref[0]
+    dx = ca[0] - cb[0]
+    dy = ca[1] - cb[1]
+    dz = ca[2] - cb[2]
+    d = jnp.sqrt(dx * dx + dy * dy + dz * dz)
+    out_ref[0] = theta * d - (ra_ref[0] + rb_ref[0])
+
+
+def mac_margins_ref(ca, ra, cb, rb, theta: float):
+    """jnp reference: same arithmetic as the kernel body, any K."""
+    d = jnp.sqrt(jnp.sum((ca - cb) ** 2, axis=-1))
+    return theta * d - (ra + rb)
+
+
+def mac_margins(ca, ra, cb, rb, theta: float, *, interpret: bool = True,
+                block: int = MAC_BLOCK):
+    """Score a padded pair frontier in one launch.
+
+    ca/cb: (K, 3) f32 gathered centers; ra/rb: (K,) f32 gathered radii;
+    K must be a multiple of `block` (the traversal's frontier capacities are
+    powers of two >= 128).  Returns (K,) f32 margins; padded slots produce
+    garbage the caller masks.  Trace-safe inside scan/while_loop bodies.
+    """
+    K = ra.shape[0]
+    if K % block != 0:
+        raise ValueError(f"frontier length {K} not a multiple of {block}")
+    # structure-of-arrays for lane-friendly broadcast (cf. kernels.p2p)
+    ca_t = jnp.swapaxes(ca, 0, 1)[None]          # (1, 3, K)
+    cb_t = jnp.swapaxes(cb, 0, 1)[None]
+    out = pl.pallas_call(
+        functools.partial(_mac_kernel, theta),
+        grid=(1, K // block),
+        in_specs=[
+            pl.BlockSpec((1, 3, block), lambda p, t: (p, 0, t)),
+            pl.BlockSpec((1, block), lambda p, t: (p, t)),
+            pl.BlockSpec((1, 3, block), lambda p, t: (p, 0, t)),
+            pl.BlockSpec((1, block), lambda p, t: (p, t)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda p, t: (p, t)),
+        out_shape=jax.ShapeDtypeStruct((1, K), ra.dtype),
+        interpret=interpret,
+    )(ca_t, ra[None], cb_t, rb[None])
+    return out[0]

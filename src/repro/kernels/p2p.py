@@ -23,6 +23,8 @@ under interpret mode (where wall time is meaningless).
 from __future__ import annotations
 
 import functools
+import json
+import os
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +39,67 @@ BLOCK_CANDIDATES = (128, 256, 512)
 # T is part of the key — buckets sharing (S, n_pairs) but differing in
 # target width need different tilings.
 _BLOCK_CACHE: dict[tuple[int, int, int], int] = {}
+
+# --- on-disk persistence of MEASURED autotune choices ----------------------
+# Measured sweeps (real device backends) are the expensive part of warmup;
+# persisting them keyed by (backend, shape class) lets repeat runs — and
+# serving fleets — skip the sweep entirely.  Interpret-mode heuristics are
+# free to recompute and are never persisted, so CPU test runs touch no disk.
+# Opt out with REPRO_P2P_CACHE=0; relocate with REPRO_P2P_CACHE_PATH.
+_PERSIST_LOADED = False
+
+
+def _persist_enabled() -> bool:
+    return os.environ.get("REPRO_P2P_CACHE", "1").lower() not in (
+        "0", "", "off", "no", "false")
+
+
+def _persist_path() -> str:
+    return os.environ.get("REPRO_P2P_CACHE_PATH") or os.path.join(
+        os.path.expanduser("~"), ".cache", "repro-fmm",
+        "p2p_block_cache.json")
+
+
+def _load_persisted(backend: str) -> None:
+    """Merge this backend's persisted choices into the in-process cache
+    (once per process; in-process entries win)."""
+    global _PERSIST_LOADED
+    if _PERSIST_LOADED:
+        return
+    _PERSIST_LOADED = True
+    try:
+        with open(_persist_path()) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return
+    for k, v in data.get(backend, {}).items():
+        try:
+            S, n, T = (int(t) for t in k.split(","))
+            choice = int(v)
+        except (TypeError, ValueError):
+            continue
+        if choice in BLOCK_CANDIDATES:
+            _BLOCK_CACHE.setdefault((S, n, T), choice)
+
+
+def _save_persisted(backend: str, key: tuple, choice: int) -> None:
+    """Read-merge-write (atomic rename); persistence failures are silent —
+    the cache is an optimization, never a correctness dependency."""
+    path = _persist_path()
+    try:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            data = {}
+        data.setdefault(backend, {})[",".join(map(str, key))] = int(choice)
+        tmp = f"{path}.{os.getpid()}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(data, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass
 
 
 def _p2p_kernel(q_ref, xs_ref, xt_ref, out_ref):
@@ -110,8 +173,13 @@ def best_block_t(S: int, n_pairs: int, T: int = TB, *,
     (S, n_pairs, T).  On a real backend (`interpret=False`) the first call
     for a shape class times every candidate on `sample` (a (q, xs, xt)
     tuple) and keeps the argmin; under interpret mode timing is meaningless,
-    so a VMEM heuristic is cached instead."""
+    so a VMEM heuristic is cached instead.  Measured choices persist to a
+    small on-disk JSON keyed (backend, shape class) — see `_persist_path` /
+    REPRO_P2P_CACHE — so repeat runs skip the warmup sweep."""
     key = (int(S), int(n_pairs), int(T))
+    persist = not interpret and _persist_enabled()
+    if persist:
+        _load_persisted(jax.default_backend())
     hit = _BLOCK_CACHE.get(key)
     if hit is not None:
         return hit
@@ -133,5 +201,7 @@ def best_block_t(S: int, n_pairs: int, T: int = TB, *,
             dt = statistics.median(reps)
             if dt < best:
                 best, choice = dt, cand
+        if persist:
+            _save_persisted(jax.default_backend(), key, choice)
     _BLOCK_CACHE[key] = choice
     return choice

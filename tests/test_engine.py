@@ -108,9 +108,11 @@ def test_session_engine_dispatch_matches_reference_session():
 
 
 def test_engine_step_zero_multipole_transfers(monkeypatch):
-    """Acceptance criterion: after warmup, a within-slack step re-uploads
-    ONLY the stacked (x, q) payload — engine memo misses +2, zero
-    per-partition host upward_pass calls, zero multipole uploads."""
+    """Acceptance criterion: after warmup, a within-slack step issues no
+    per-partition host transfers — revalidation is ONE batched device launch
+    fed by a single new_x upload (+3 one-time frozen tables on the first
+    step), the restacked device payload is reused for evaluation, and zero
+    host upward_pass calls / multipole uploads happen."""
     x, q = _problem()
     sess = FMMSession.from_points(x, q, PartitionSpec(nparts=4, ncrit=48),
                                   engine=True, use_kernels=False)
@@ -134,8 +136,19 @@ def test_engine_step_zero_multipole_transfers(monkeypatch):
     assert sess.geometry.Ms_stale == (0, 1, 2, 3)
     phi1 = sess.potentials("hsdx").phi
     assert eng.payload_refreshes == 1
-    # exactly the stacked x and q payload crossed the host->device boundary
-    assert eng.memo.misses == misses0 + 2
+    # first step: new_x + the three one-time revalidation tables (x_ref
+    # envelope and the orig->flat gather pair) — NOTHING per-partition, and
+    # evaluation reuses the device-restacked payload with zero extra uploads
+    assert eng.memo.misses == misses0 + 4
+    assert calls == []
+
+    # steady state: each further within-slack step uploads exactly new_x
+    misses1 = eng.memo.misses
+    x2 = x1 + rng.uniform(-eps / 8, eps / 8, size=x.shape)
+    rep2 = sess.step(x2)
+    assert rep2.rebuilt == () and len(rep2.refreshed) == 4
+    phi2 = sess.potentials("hsdx").phi
+    assert eng.memo.misses == misses1 + 1
     assert calls == []
 
     ref = FMMSession.from_points(x, q, PartitionSpec(nparts=4, ncrit=48),
@@ -143,6 +156,61 @@ def test_engine_step_zero_multipole_transfers(monkeypatch):
     ref.step(x1)
     np.testing.assert_allclose(phi1, ref.potentials("hsdx").phi,
                                rtol=RTOL, atol=ATOL)
+    ref.step(x2)
+    np.testing.assert_allclose(phi2, ref.potentials("hsdx").phi,
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_engine_step_with_charge_change_falls_back_to_host_revalidation():
+    """The single-upload device revalidation path is position-only; a step
+    that also rebinds charges must still agree with the reference session."""
+    x, q = _problem(n=1000)
+    spec = PartitionSpec(nparts=4, ncrit=48)
+    sess = FMMSession.from_points(x, q, spec, engine=True, use_kernels=False)
+    ref = FMMSession.from_points(x, q, spec, engine=False)
+    sess.potentials()
+    ref.potentials()
+    eps = float(sess.geometry.slack.min())
+    rng = np.random.default_rng(2)
+    x1 = x + rng.uniform(-eps / 4, eps / 4, size=x.shape)
+    q1 = q * 1.25
+    rep = sess.step(x1, q1)
+    ref.step(x1, q1)
+    assert rep.rebuilt == ()
+    np.testing.assert_allclose(sess.potentials("hsdx").phi,
+                               ref.potentials("hsdx").phi, rtol=RTOL,
+                               atol=ATOL)
+
+
+# ------------------------------------------------ x64 device accumulation --
+def test_engine_x64_device_accumulation_matches_reference():
+    """Acceptance criterion: with x64 enabled the engine's segment sums stay
+    on device and return ONE (N,) float64 device array matching the host-
+    accumulated reference within the engine tolerances."""
+    import jax
+    import jax.numpy as jnp
+    x, q = _problem(n=900)
+    geo = plan_geometry(x, q, PartitionSpec(nparts=3, ncrit=48))
+    ref = execute_geometry(geo)
+    jax.config.update("jax_enable_x64", True)
+    try:
+        eng = DeviceEngine(geo, use_kernels=False)
+        phi_dev = eng.evaluate_device()
+        assert isinstance(phi_dev, jax.Array)
+        assert phi_dev.shape == (geo.n,) and phi_dev.dtype == jnp.float64
+        phi = eng.evaluate()               # same path, host boundary only
+    finally:
+        jax.config.update("jax_enable_x64", False)
+    np.testing.assert_allclose(np.asarray(phi_dev), ref, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(phi, ref, rtol=RTOL, atol=ATOL)
+
+
+def test_evaluate_device_requires_x64():
+    x, q = _problem(n=300, dist="cube")
+    geo = plan_geometry(x, q, PartitionSpec(nparts=2, ncrit=48))
+    eng = DeviceEngine(geo, use_kernels=False)
+    with pytest.raises(RuntimeError, match="x64"):
+        eng.evaluate_device()
 
 
 def test_engine_step_rebuild_syncs_host_mirrors():

@@ -115,3 +115,70 @@ def test_wkv_chunk_invariance():
     y128, s128 = ops.rwkv6_wkv(args[0], args[1], args[2], w, u, s0, chunk=128)
     np.testing.assert_allclose(np.asarray(y32), np.asarray(y128), rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(np.asarray(s32), np.asarray(s128), rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------- autotune persistence ----
+def _fake_measured_autotune(monkeypatch, tmp_path):
+    """Route best_block_t's measured sweep through a fake kernel + clock
+    (real interpret=False compiles are impossible on CPU) and a tmp cache
+    file."""
+    import time as _time
+    from repro.kernels import p2p as kp
+    monkeypatch.setenv("REPRO_P2P_CACHE_PATH", str(tmp_path / "cache.json"))
+    monkeypatch.delenv("REPRO_P2P_CACHE", raising=False)
+    monkeypatch.setattr(kp, "_BLOCK_CACHE", {})
+    monkeypatch.setattr(kp, "_PERSIST_LOADED", False)
+    calls = []
+    clock = iter(np.arange(0.0, 1000.0, 0.5))
+
+    def fake_pallas(q, xs, xt, *, interpret, block_t):
+        calls.append(block_t)
+        return jnp.zeros((xt.shape[0], xt.shape[1]), jnp.float32)
+
+    monkeypatch.setattr(kp, "p2p_pallas", fake_pallas)
+    monkeypatch.setattr(_time, "perf_counter", lambda: next(clock))
+    return kp, calls
+
+
+def test_autotune_persists_measured_choice(monkeypatch, tmp_path):
+    """A measured (non-interpret) sweep writes its choice to the on-disk
+    JSON keyed (backend, shape class); a fresh process-alike (cleared
+    in-memory cache) reloads it WITHOUT re-measuring."""
+    import json
+    kp, calls = _fake_measured_autotune(monkeypatch, tmp_path)
+    sample = (jnp.zeros((2, 64), jnp.float32),
+              jnp.zeros((2, 64, 3), jnp.float32),
+              jnp.zeros((2, 40, 3), jnp.float32))
+    choice = kp.best_block_t(64, 2, 40, interpret=False, sample=sample)
+    assert choice in kp.BLOCK_CANDIDATES and calls
+    data = json.loads((tmp_path / "cache.json").read_text())
+    backend = jax.default_backend()
+    assert data[backend]["64,2,40"] == choice
+
+    # "new process": clear the in-memory cache, keep the disk file
+    monkeypatch.setattr(kp, "_BLOCK_CACHE", {})
+    monkeypatch.setattr(kp, "_PERSIST_LOADED", False)
+    calls.clear()
+    assert kp.best_block_t(64, 2, 40, interpret=False, sample=sample) == choice
+    assert calls == []                  # served from disk, no warmup sweep
+
+
+def test_autotune_persistence_env_opt_out(monkeypatch, tmp_path):
+    kp, calls = _fake_measured_autotune(monkeypatch, tmp_path)
+    monkeypatch.setenv("REPRO_P2P_CACHE", "0")
+    sample = (jnp.zeros((1, 64), jnp.float32),
+              jnp.zeros((1, 64, 3), jnp.float32),
+              jnp.zeros((1, 40, 3), jnp.float32))
+    kp.best_block_t(64, 1, 40, interpret=False, sample=sample)
+    assert calls                        # measured in-process...
+    assert not (tmp_path / "cache.json").exists()   # ...but never persisted
+
+
+def test_autotune_interpret_mode_never_touches_disk(monkeypatch, tmp_path):
+    from repro.kernels import p2p as kp
+    monkeypatch.setenv("REPRO_P2P_CACHE_PATH", str(tmp_path / "cache.json"))
+    monkeypatch.setattr(kp, "_BLOCK_CACHE", {})
+    monkeypatch.setattr(kp, "_PERSIST_LOADED", False)
+    assert kp.best_block_t(64, 3, 32, interpret=True) in kp.BLOCK_CANDIDATES
+    assert not (tmp_path / "cache.json").exists()
+    assert kp._PERSIST_LOADED is False  # load path skipped entirely

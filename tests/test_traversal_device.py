@@ -1,0 +1,189 @@
+"""Device-resident dual traversal (repro.core.engine.traversal): the
+`jax.lax.while_loop` frontier program + Pallas MAC kernel must reproduce the
+host reference `core.traversal.dual_traversal` exactly — same pair SETS and,
+because the device loop replicates the host's expansion ordering, the same
+pair ORDER, which makes every downstream InteractionPlan (and therefore the
+executed potential) byte-identical between backends.
+
+The MAC decisions are scored in f32 on device vs f64 on the host, so exact
+agreement is only guaranteed away from razor-thin margins; the fixed-seed
+cases here are robust (verified by the theta/radius-jitter certificate used
+in test_traversal_device_property.py)."""
+import numpy as np
+import pytest
+
+import repro.core.engine.traversal as dtrav
+from repro.core.api import PartitionSpec, execute_geometry, plan_geometry
+from repro.core.distributions import make_distribution
+from repro.core.engine.traversal import (device_dual_traversal,
+                                         resolve_traversal_backend)
+from repro.core.fmm import upward_pass
+from repro.core.let import extract_let, graft
+from repro.core.multipole import get_operators
+from repro.core.traversal import dual_traversal
+from repro.core.tree import build_tree, flat_cell_tables
+
+
+def _problem(n=1500, seed=3, dist="sphere", ncrit=48):
+    x = make_distribution(dist, n, seed=seed)
+    q = np.random.default_rng(seed + 1).uniform(-1, 1, n)
+    return x, q, build_tree(x, q, ncrit=ncrit)
+
+
+# ------------------------------------------------------ golden: local pair --
+@pytest.mark.parametrize("dist,ncrit", [("sphere", 48), ("plummer", 32),
+                                        ("cube", 64)])
+def test_device_traversal_matches_host_local(dist, ncrit):
+    _, _, t = _problem(n=1200, dist=dist, ncrit=ncrit)
+    m2l_h, p2p_h = dual_traversal(t, t, 0.5)
+    m2l_d, p2p_d, m2p_d, margin = device_dual_traversal(t, t, 0.5)
+    np.testing.assert_array_equal(m2l_d, m2l_h)   # order-identical, not just
+    np.testing.assert_array_equal(p2p_d, p2p_h)   # set-identical
+    assert len(m2p_d) == 0
+    # the traversal's margin output IS the host slack quantity (f32 vs f64)
+    a, b = m2l_h[:, 0], m2l_h[:, 1]
+    d = np.linalg.norm(t.center[a] - t.center[b], axis=1)
+    ref = float(np.min(0.5 * d - (t.radius[a] + t.radius[b])))
+    np.testing.assert_allclose(margin, ref, rtol=1e-4, atol=1e-7)
+
+
+def test_device_traversal_grafted_let_with_m2p():
+    x, q, _ = _problem(n=1600, dist="sphere")
+    idx = x[:, 0] < 0
+    t_src = build_tree(x[idx], q[idx], ncrit=32)
+    t_tgt = build_tree(x[~idx], q[~idx], ncrit=256)   # large leaves => M2P
+    M = np.asarray(upward_pass(t_src, get_operators(4)))
+    let = extract_let(t_src, M, x[~idx].min(0), x[~idx].max(0), 0.5)
+    g = graft(let)
+    host = dual_traversal(t_tgt, g, 0.5, with_m2p=True)
+    dev = device_dual_traversal(t_tgt, g, 0.5, with_m2p=True)
+    for h, d in zip(host, dev[:3]):
+        np.testing.assert_array_equal(d, h)
+
+
+def test_device_traversal_overflow_retry(monkeypatch):
+    """Deliberately tiny initial capacities must transparently double (and
+    remember the bump) rather than truncate or crash."""
+    monkeypatch.setattr(dtrav, "_CAPS_CACHE", {})
+    monkeypatch.setattr(dtrav, "traversal_caps",
+                        lambda pad: (128, 128, 128, 128))
+    _, _, t = _problem(n=800, ncrit=32)
+    m2l_h, p2p_h = dual_traversal(t, t, 0.5)
+    m2l_d, p2p_d, _, _ = device_dual_traversal(t, t, 0.5)
+    np.testing.assert_array_equal(m2l_d, m2l_h)
+    np.testing.assert_array_equal(p2p_d, p2p_h)
+    assert dtrav._CAPS_CACHE          # the doubled caps were remembered
+
+
+def test_flat_cell_tables_padding_is_inert():
+    _, _, t = _problem(n=300, ncrit=32)
+    tab = flat_cell_tables(t)
+    C, Cpad = tab["n_cells"], len(tab["radius"])
+    assert Cpad >= C and (Cpad & (Cpad - 1)) == 0
+    assert tab["is_leaf"][C:].all() and not tab["n_child"][C:].any()
+    assert not tab["truncated"].any()            # plain trees: no truncation
+    with pytest.raises(ValueError):
+        flat_cell_tables(t, pad_cells=C - 1)
+
+
+def test_resolve_traversal_backend():
+    assert resolve_traversal_backend("host") == "host"
+    assert resolve_traversal_backend("device") == "device"
+    assert resolve_traversal_backend(None) in ("host", "device")
+    assert (resolve_traversal_backend("auto")
+            == resolve_traversal_backend(None))
+    with pytest.raises(ValueError, match="traversal_backend"):
+        resolve_traversal_backend("gpu")
+
+
+# -------------------------------------------------- golden: whole geometry --
+def _assert_geometry_identical(geo_h, geo_d):
+    np.testing.assert_array_equal(geo_d.bytes_matrix, geo_h.bytes_matrix)
+    np.testing.assert_allclose(geo_d.slack, geo_h.slack, rtol=1e-4,
+                               atol=1e-7)
+    for rh, rd in zip(geo_h.receivers, geo_d.receivers):
+        assert (rh is None) == (rd is None)
+        if rh is None:
+            continue
+        for ih, id_ in ((rh.local, rd.local),
+                        *((a.inter, b.inter)
+                          for a, b in zip(rh.remote, rd.remote))):
+            np.testing.assert_array_equal(id_.m2l_a, ih.m2l_a)
+            np.testing.assert_array_equal(id_.m2l_b, ih.m2l_b)
+            np.testing.assert_array_equal(id_.m2p_b, ih.m2p_b)
+            assert len(id_.p2p_blocks) == len(ih.p2p_blocks)
+            for bh, bd in zip(ih.p2p_blocks, id_.p2p_blocks):
+                np.testing.assert_array_equal(bd.t_idx, bh.t_idx)
+                np.testing.assert_array_equal(bd.s_idx, bh.s_idx)
+    # byte-identical LETs (extraction is traversal-independent, pinned here
+    # as the acceptance criterion demands)
+    assert set(geo_d.lets) == set(geo_h.lets)
+    for k, lh in geo_h.lets.items():
+        ld = geo_d.lets[k]
+        for f in ("center", "radius", "M", "child_start", "n_child",
+                  "body_start", "n_body", "truncated", "x", "q"):
+            np.testing.assert_array_equal(getattr(ld, f), getattr(lh, f))
+
+
+@pytest.mark.parametrize("method,nparts", [("orb", 4), ("morton", 4)])
+def test_plan_geometry_device_backend_matches_host(method, nparts):
+    x = make_distribution("sphere", 1200, seed=7)
+    q = np.random.default_rng(8).uniform(-1, 1, 1200)
+    spec = PartitionSpec(nparts=nparts, method=method, ncrit=48)
+    geo_h = plan_geometry(x, q, spec)                       # host default
+    geo_d = plan_geometry(x, q, spec, traversal_backend="device")
+    _assert_geometry_identical(geo_h, geo_d)
+    # identical plans => byte-identical executed potentials
+    np.testing.assert_array_equal(execute_geometry(geo_d),
+                                  execute_geometry(geo_h))
+
+
+def test_plan_geometry_device_backend_empty_partition_sentinels():
+    """Morton with duplicated clusters: >= 3 empty partitions carry the
+    inf/-inf sentinel boxes; the device backend must skip them exactly like
+    the host path."""
+    pts = np.array([[.1, .1, .1], [.8, .2, .3], [.3, .9, .5],
+                    [.6, .6, .9], [.9, .9, .1]])
+    x = np.repeat(pts, 60, axis=0)
+    q = np.random.default_rng(1).uniform(-1, 1, len(x))
+    spec = PartitionSpec(nparts=8, method="morton", ncrit=64)
+    geo_h = plan_geometry(x, q, spec)
+    geo_d = plan_geometry(x, q, spec, traversal_backend="device")
+    empty = [p for p in range(8) if len(geo_d.owners[p]) == 0]
+    assert len(empty) >= 3
+    for p in empty:
+        assert np.all(geo_d.boxes[p, 0] == np.inf)
+        assert np.all(geo_d.boxes[p, 1] == -np.inf)
+        assert geo_d.receivers[p] is None
+    _assert_geometry_identical(geo_h, geo_d)
+
+
+# --------------------------------------------- Pallas MAC kernel (interpret) -
+def test_mac_kernel_interpret_smoke():
+    """The Pallas MAC scoring path (use_kernel=True, interpret mode — what
+    CPU CI exercises; TPU runs compile the same kernel) must agree with the
+    jnp reference route bit-for-bit through the whole traversal."""
+    _, _, t = _problem(n=600, ncrit=32)
+    ref = device_dual_traversal(t, t, 0.5, use_kernel=False)
+    ker = device_dual_traversal(t, t, 0.5, use_kernel=True, interpret=True)
+    for a, b in zip(ref[:3], ker[:3]):
+        np.testing.assert_array_equal(b, a)
+    assert ref[3] == ker[3]
+    m2l_h, p2p_h = dual_traversal(t, t, 0.5)
+    np.testing.assert_array_equal(ker[0], m2l_h)
+    np.testing.assert_array_equal(ker[1], p2p_h)
+
+
+def test_mac_margins_kernel_matches_reference():
+    import jax.numpy as jnp
+    from repro.kernels.mac import mac_margins, mac_margins_ref
+    rng = np.random.default_rng(0)
+    ca = jnp.asarray(rng.uniform(-1, 1, (256, 3)).astype(np.float32))
+    cb = jnp.asarray(rng.uniform(-1, 1, (256, 3)).astype(np.float32))
+    ra = jnp.asarray(rng.uniform(0, .2, 256).astype(np.float32))
+    rb = jnp.asarray(rng.uniform(0, .2, 256).astype(np.float32))
+    got = np.asarray(mac_margins(ca, ra, cb, rb, 0.5, interpret=True))
+    ref = np.asarray(mac_margins_ref(ca, ra, cb, rb, 0.5))
+    np.testing.assert_allclose(got, ref, rtol=1e-6, atol=1e-7)
+    with pytest.raises(ValueError, match="multiple"):
+        mac_margins(ca[:100], ra[:100], cb[:100], rb[:100], 0.5)
