@@ -91,6 +91,79 @@ def _step_revalidation_rows(n, nparts, theta, ncrit):
     return rows
 
 
+def _fused_engine_rows(n, nparts, theta, ncrit):
+    """Fused megakernel + AOT executable-cache rows (repro.core.engine.fused):
+    cold lower+compile vs warm one-launch evaluate, fused vs per-phase warm
+    latency, warm within-slack fused step, and the second geometry of the
+    SAME shape class — which must be served from the executable cache with
+    zero XLA compilations (asserted via the miss counter)."""
+    from repro.core.api import FMMSession, PartitionSpec, plan_geometry
+    from repro.core.engine import ExecutableCache
+    x = make_distribution("sphere", n, seed=6)
+    q = np.random.default_rng(7).uniform(-1, 1, n)
+    spec = PartitionSpec(nparts=nparts, theta=theta, ncrit=ncrit)
+    cache = ExecutableCache()
+
+    sess = FMMSession(plan_geometry(x, q, spec), engine=True, fused=True,
+                      use_kernels=False, exe_cache=cache)
+    us_cold = _time(sess.evaluate)          # lower + XLA compile + launch
+    us_warm = _time(sess.evaluate)          # ONE entry-computation launch
+
+    pp = FMMSession(plan_geometry(x, q, spec), engine=True, fused=False,
+                    use_kernels=False)
+    pp.evaluate()                           # warm the per-phase jits
+    us_pp = _time(pp.evaluate)
+
+    rng = np.random.default_rng(8)
+    eps = float(sess.geometry.slack.min()) / 4
+    sess.step(x + rng.uniform(-eps, eps, x.shape))   # compile the step entry
+    step_x = x + rng.uniform(-eps, eps, x.shape)
+    us_step = _time(lambda: sess.step(step_x))       # ONE launch, within slack
+
+    misses0 = cache.misses
+    sess2 = FMMSession(plan_geometry(x.copy(), q.copy(), spec), engine=True,
+                       fused=True, use_kernels=False, exe_cache=cache)
+    us_second = _time(sess2.evaluate)       # warm-cache cold start
+    zero_recompile = cache.misses == misses0
+    assert zero_recompile, \
+        f"second same-shape-class geometry recompiled: {cache.stats()}"
+    return [
+        (f"fused_compile_cold_n{n}_p{nparts}", us_cold,
+         "lower+compile+launch"),
+        (f"fused_evaluate_warm_n{n}_p{nparts}", us_warm,
+         f"cold/warm={us_cold / max(us_warm, 1e-9):.1f}x"),
+        (f"perphase_evaluate_warm_n{n}_p{nparts}", us_pp,
+         f"perphase/fused={us_pp / max(us_warm, 1e-9):.2f}x"),
+        (f"fused_step_warm_n{n}_p{nparts}", us_step, ""),
+        (f"fused_second_geometry_first_eval_n{n}_p{nparts}", us_second,
+         f"cache_hits={cache.hits};misses={cache.misses};"
+         f"zero_recompile={zero_recompile}"),
+    ]
+
+
+def write_bench_json(rows, path, meta=None) -> str:
+    """Persist benchmark rows as machine-readable BENCH_*.json (atomic
+    rename), so the perf trajectory is tracked across PRs instead of
+    scrolling away in CI logs.  Schema: {schema, unix_time, meta,
+    rows: [{name, us_per_call, derived}]}."""
+    import json
+    payload = {
+        "schema": "repro-bench-v1",
+        "unix_time": time.time(),
+        "meta": dict(meta or {}),
+        "rows": [{"name": name, "us_per_call": us, "derived": derived}
+                 for name, us, derived in rows],
+    }
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    tmp = f"{path}.{os.getpid()}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+    return path
+
+
 def run(n: int | None = None, nparts: int = 8, theta: float = 0.5,
         ncrit: int = 64, traversal_backend: str | None = None):
     n = n or int(os.environ.get("HOST_SIDE_N", 20000))
@@ -155,13 +228,35 @@ def run(n: int | None = None, nparts: int = 8, theta: float = 0.5,
         rows += _device_traversal_rows(trees, theta, us_tv)
         rows += _step_revalidation_rows(min(n, 6000), min(nparts, 4), theta,
                                         ncrit)
+    # fused megakernel + executable cache: toy size — the rows meter launch
+    # and compile overhead, which does not need the full body count
+    rows += _fused_engine_rows(min(n, 4000), min(nparts, 4), theta, ncrit)
     return rows
 
 
 if __name__ == "__main__":
     backend = None
+    fused_only = False
+    json_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "BENCH_host_side.json")
     for a in sys.argv[1:]:
         if a.startswith("--traversal-backend="):
             backend = a.split("=", 1)[1]
-    for name, us, derived in run(traversal_backend=backend):
+        elif a == "--fused-only":       # CI warm-cache smoke: skip the
+            fused_only = True           # 20k-body geometry sweep entirely
+        elif a.startswith("--json="):
+            json_path = a.split("=", 1)[1]
+        elif a == "--no-json":
+            json_path = None
+    if fused_only:
+        n = int(os.environ.get("HOST_SIDE_N", 20000))
+        out = _fused_engine_rows(min(n, 4000), 4, 0.5, 64)
+    else:
+        out = run(traversal_backend=backend)
+    for name, us, derived in out:
         print(f"{name},{us:.1f},{derived}")
+    if json_path:
+        where = write_bench_json(out, json_path,
+                                 meta={"module": "host_side",
+                                       "fused_only": fused_only})
+        print(f"# wrote {where}", file=sys.stderr)

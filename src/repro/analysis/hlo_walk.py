@@ -73,6 +73,22 @@ def _entry_name(txt: str) -> str | None:
     return m.group(1) if m else None
 
 
+def count_entry_launches(txt: str) -> int:
+    """Number of ENTRY computations in (possibly concatenated) compiled HLO
+    text — the dispatch count a warm caller pays: every compiled executable
+    has exactly one ENTRY, so a pipeline's launch count is the ENTRY count
+    over its executables' HLO.  Counts only ENTRY headers that parse as real
+    computations (`parse_computations`), so stray 'ENTRY' tokens in operand
+    metadata never inflate the result.  The fused-engine tests pin warm
+    evaluate()/step() at exactly 1.
+
+    NOTE: feed `compiled.as_text()` (post-compilation HLO).  `lowered
+    .as_text()` is StableHLO, which has no ENTRY headers and counts as 0."""
+    comps = parse_computations(txt)
+    entries = re.findall(r"^ENTRY\s+%?([\w.\-]+)", txt, re.M)
+    return sum(1 for e in entries if e in comps)
+
+
 def _trip_count(cond_lines) -> int:
     """Largest integer constant in the while condition ~= trip bound."""
     best = 1

@@ -282,6 +282,14 @@ class DeviceMemo:
         self._views[key] = (anchor, dev)
         return dev
 
+    def is_resident(self, arr) -> bool:
+        """True iff `arr` IS one of the memoized device views (identity, not
+        equality).  The fused engine's donation guard: memo-resident views
+        must never be donated to a launch — donation deletes the buffer and
+        the memo would keep serving the dead view (see
+        `engine.DeviceEngine._donatable` / `fmm.device_hook`)."""
+        return any(view is arr for _, view in self._views.values())
+
     def __len__(self) -> int:
         return len(self._views)
 
@@ -586,7 +594,8 @@ class FMMSession:
 
     def __init__(self, geometry: GeometryPlan, engine: bool | None = None,
                  use_kernels: bool | None = None,
-                 use_pallas: bool | None = None):
+                 use_pallas: bool | None = None,
+                 fused: bool | None = None, exe_cache=None):
         from repro.core.engine import (default_engine_enabled,
                                        default_use_kernels)
         if use_pallas is not None:      # deprecated alias, warn-once + honor
@@ -600,6 +609,8 @@ class FMMSession:
                                else bool(engine))
         self.use_kernels = (default_use_kernels() if use_kernels is None
                             else bool(use_kernels))
+        self.fused = fused               # None -> default_fused_enabled()
+        self.exe_cache = exe_cache       # None -> process-wide GLOBAL_CACHE
         self._engine = None
         self._memo = DeviceMemo()
         self._comm_cache: dict = {}
@@ -610,9 +621,12 @@ class FMMSession:
     def from_points(cls, x, q, spec: PartitionSpec | None = None,
                     engine: bool | None = None,
                     use_kernels: bool | None = None,
-                    use_pallas: bool | None = None, **overrides) -> "FMMSession":
+                    use_pallas: bool | None = None,
+                    fused: bool | None = None, exe_cache=None,
+                    **overrides) -> "FMMSession":
         return cls(plan_geometry(x, q, spec, **overrides), engine=engine,
-                   use_kernels=use_kernels, use_pallas=use_pallas)
+                   use_kernels=use_kernels, use_pallas=use_pallas,
+                   fused=fused, exe_cache=exe_cache)
 
     @property
     def geometry(self) -> GeometryPlan:
@@ -634,8 +648,22 @@ class FMMSession:
             # meter whichever dispatch path runs
             self._engine = DeviceEngine(self._geo,
                                         use_kernels=self.use_kernels,
-                                        asarray=self._memo)
+                                        asarray=self._memo,
+                                        fused=self.fused,
+                                        exe_cache=self.exe_cache)
         return self._engine
+
+    @property
+    def exe_cache_stats(self) -> dict:
+        """Hit/miss/eviction counters of the fused executable cache this
+        session resolves against (the process-wide GLOBAL_CACHE unless a
+        private `exe_cache=` was passed).  `misses` counts actual XLA
+        compilations — a second same-shape-class geometry must not move it
+        (the zero-recompile guarantee tests pin)."""
+        from repro.core.engine import resolve_cache
+        eng = self._engine
+        cache = eng.exe_cache if eng is not None else resolve_cache(self.exe_cache)
+        return cache.stats()
 
     # ------------------------------------------------------------- comm ---
     def comm(self, protocol: str = "hsdx", grain_bytes: int | None = None,

@@ -27,6 +27,14 @@ array pair, invalidate the cached multipoles — and the next evaluation
 recomputes every drifting partition's multipoles on device in a single
 launch: zero per-partition host->device multipole transfers (the
 `DeviceMemo.misses` counter is the transfer meter tests pin).
+
+Serving tier on top (`fused=True`, default on device backends): the phases
+above fuse into ONE donated entry-computation launch per warm `evaluate()` /
+within-slack `step_drift()` (engine.fused), AOT-compiled once per *shape
+class* through `engine.exe_cache.ExecutableCache` — a second geometry with
+the same padded dims/statics pays zero XLA compilations.  Payload buffers
+are donated and threaded back out (XLA input-output aliasing); DeviceMemo
+table views are never donated (see `fmm.device_hook`).
 """
 from __future__ import annotations
 
@@ -34,11 +42,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.engine import fused as _fused_mod
+from repro.core.engine.exe_cache import (ExecutableCache, GLOBAL_CACHE,
+                                         resolve_cache)
 from repro.core.engine.m2l import far_tail_kernel, m2p_vals_kernel
 from repro.core.engine.p2p import p2p_bucket_vals
 from repro.core.engine.schedules import (BatchedUpwardSchedule, EngineTables,
                                          build_batched_upward,
-                                         build_engine_tables, stack_bodies,
+                                         build_engine_tables,
+                                         shape_class_digest, stack_bodies,
                                          stack_reference_bodies)
 from repro.core.engine.traversal import (default_traversal_backend,
                                          device_dual_traversal,
@@ -52,9 +64,11 @@ from repro.core.multipole import get_operators
 __all__ = ["DeviceEngine", "EngineTables", "BatchedUpwardSchedule",
            "build_engine_tables", "build_batched_upward", "batched_upward",
            "batched_upward_kernel", "stack_bodies", "default_engine_enabled",
-           "default_use_kernels", "default_traversal_backend",
-           "resolve_traversal_backend", "device_dual_traversal",
-           "partition_drift", "restack_payload"]
+           "default_use_kernels", "default_fused_enabled",
+           "default_traversal_backend", "resolve_traversal_backend",
+           "device_dual_traversal", "partition_drift", "restack_payload",
+           "ExecutableCache", "GLOBAL_CACHE", "resolve_cache",
+           "shape_class_digest"]
 
 
 def default_engine_enabled() -> bool:
@@ -73,6 +87,15 @@ def default_use_kernels() -> bool:
     return not ops.INTERPRET
 
 
+def default_fused_enabled() -> bool:
+    """Fused-megakernel dispatch default: mirror `default_engine_enabled` —
+    launch overhead only dominates where there is a launch (device
+    backends); on CPU the per-phase engine stays the default so CPU test
+    runs keep pinning its counters byte-identically.  Opt in anywhere with
+    `fused=True`."""
+    return jax.default_backend() not in ("cpu",)
+
+
 class DeviceEngine:
     """Batched device executor for one `GeometryPlan` (one tree *structure*;
     the numeric payload may rebind across timesteps via `refresh_payload`).
@@ -86,15 +109,29 @@ class DeviceEngine:
     asarray : device-upload hook (api.DeviceMemo or compatible); a fresh
         `DeviceMemo` is created when omitted.  `memo.misses` counts every
         host->device transfer the engine performs.
+    fused : collapse each warm `evaluate()` / `step_drift()` into ONE
+        donated entry-computation launch (engine.fused), AOT-compiled
+        through the shape-class executable cache; default
+        `default_fused_enabled()` (on iff a device backend is present).
+        The per-phase path stays available on the same engine and is the
+        pinned numeric comparison.
+    exe_cache : `exe_cache.ExecutableCache` for fused executables; the
+        process-wide `GLOBAL_CACHE` when omitted, so geometries of one
+        shape class share one compilation across sessions.
     """
 
     def __init__(self, geometry, *, use_kernels: bool | None = None,
-                 interpret: bool | None = None, asarray=None):
+                 interpret: bool | None = None, asarray=None,
+                 fused: bool | None = None, exe_cache=None):
         from repro.core.api import DeviceMemo
         self.geo = geometry
         self.use_kernels = (default_use_kernels() if use_kernels is None
                             else bool(use_kernels))
         self.interpret = interpret
+        self.fused = default_fused_enabled() if fused is None else bool(fused)
+        self.exe_cache = resolve_cache(exe_cache)
+        self._entries: dict = {}     # (kind, x64) -> (CompiledEntry, tabs)
+        self.launch_log: list = []   # (kind, key) per fused dispatch
         self.memo = DeviceMemo() if asarray is None else asarray
         self._aa = device_hook(self.memo)
         self.tables: EngineTables = build_engine_tables(geometry)
@@ -135,6 +172,99 @@ class DeviceEngine:
     def discard_pending(self) -> None:
         self._pending_x_pad = None
 
+    # ------------------------------------------------------------- fused --
+    def _donatable(self, arr, dtype=None):
+        """Upload (explicit copy) or pass through an array that is safe to
+        DONATE to a fused launch.  Memo-resident views are rejected: donation
+        deletes the buffer after the call, and the `DeviceMemo` would keep
+        serving the dead view to every other consumer (the per-phase path,
+        sibling engines) — the residency/donation contract of engine.fused
+        and `fmm.device_hook`."""
+        if isinstance(arr, jax.Array):
+            if self.memo.is_resident(arr):
+                raise TypeError(
+                    "refusing to donate a DeviceMemo-resident view: donated "
+                    "buffers are deleted after the launch, which would "
+                    "poison the memo (engine.fused donation contract); pass "
+                    "a fresh upload or a previous fused output instead")
+            return arr if dtype is None else jnp.asarray(arr, dtype)
+        # jnp.array (copy), never asarray: CPU zero-copy uploads alias the
+        # caller's host buffer, and XLA would scribble over it on donation
+        return jnp.array(np.asarray(arr), dtype=dtype)
+
+    def _payload_device(self):
+        """The (x_pad, q_pad) payload as donatable device buffers: fresh
+        copies on first use / after a host `refresh_payload`, previous fused
+        outputs (aliased storage) on warm calls."""
+        return (self._donatable(self._x_pad, jnp.float32),
+                self._donatable(self._q_pad, jnp.float32))
+
+    def _fused_entry(self, kind: str):
+        """Resolve this engine's fused executable + uploaded tables for
+        `kind` in ("evaluate", "step"), memoized per (kind, x64): the
+        shape-class cache is consulted ONCE per engine lifetime, so its
+        hit/miss counters meter per-geometry resolutions — a second
+        same-shape-class geometry is exactly one `hits` increment and zero
+        compilations."""
+        x64 = bool(jax.config.jax_enable_x64)
+        hit = self._entries.get((kind, x64))
+        if hit is not None:
+            return hit
+        t = self.tables
+        aa = self._aa
+        if kind == "evaluate":
+            donate = (0, 1)          # both payload halves alias outputs
+            flat = _fused_mod.flatten_eval_tables(t)
+            block_ts = _fused_mod.bucket_block_ts(
+                t, use_kernels=self.use_kernels, interpret=self.interpret)
+            fn = _fused_mod.build_fused_evaluate(
+                self._ops, t, use_kernels=self.use_kernels,
+                interpret=self.interpret, block_ts=block_ts,
+                acc_dtype=jnp.float64 if x64 else jnp.float32)
+            in_sds = (jax.ShapeDtypeStruct((t.n_parts, t.n_bodies_max, 3),
+                                           jnp.float32),
+                      jax.ShapeDtypeStruct((t.n_parts, t.n_bodies_max),
+                                           jnp.float32))
+        elif kind == "step":
+            # donate x_pad only: new_x has no same-shape output to alias
+            # onto, so donating it would just trigger XLA's unusable-buffer
+            # warning without saving an allocation
+            donate = (1,)
+            if self._x_ref_pad is None:
+                self._x_ref_pad = stack_reference_bodies(self.geo, t)
+            flat = _fused_mod.flatten_step_tables(t, self._x_ref_pad)
+            block_ts = ()
+            fn = _fused_mod.build_fused_step(t)
+            in_sds = (jax.ShapeDtypeStruct((t.n, 3), jnp.float32),
+                      jax.ShapeDtypeStruct((t.n_parts, t.n_bodies_max, 3),
+                                           jnp.float32))
+        else:
+            raise ValueError(f"unknown fused entry kind {kind!r}")
+        # memoized device views — the digest sees canonicalized dtypes
+        tabs = {k: aa(v) for k, v in flat.items()}
+        key = _fused_mod.executable_key(
+            kind, shape_class_digest(tabs), n=t.n, n_parts=t.n_parts, p=t.p,
+            theta=self.geo.theta, x64=x64, backend=jax.default_backend(),
+            use_kernels=self.use_kernels, interpret=self.interpret,
+            block_ts=block_ts)
+        entry = self.exe_cache.get_or_compile(
+            key, lambda: jax.jit(fn, donate_argnums=donate)
+            .lower(*in_sds, tabs).compile())
+        self._entries[(kind, x64)] = (entry, tabs)
+        return entry, tabs
+
+    def _evaluate_fused(self):
+        """One donated launch: payload in, potential (and multipoles) out.
+        The threaded-through payload outputs rebind the engine's handles —
+        XLA aliases them onto the donated inputs' storage."""
+        entry, tabs = self._fused_entry("evaluate")
+        xd, qd = self._payload_device()
+        phi, M, x_out, q_out = entry(xd, qd, tabs)
+        self._x_pad, self._q_pad = x_out, q_out
+        self._M = M
+        self.launch_log.append(("evaluate", entry.key))
+        return phi
+
     def step_drift(self, new_x) -> tuple:
         """Batched MAC-slack revalidation: upload `new_x` ONCE, restack it
         into the (P, Nmax, 3) payload envelope on device through the frozen
@@ -143,7 +273,22 @@ class DeviceEngine:
         launch — replacing the session's per-partition NumPy loop.  The
         restacked payload is staged for `refresh_payload(use_pending=True)`.
 
-        Returns (drift (P,) float64, changed (P,) bool) host arrays."""
+        Returns (drift (P,) float64, changed (P,) bool) host arrays.
+
+        Fused mode runs the restack + both reductions as ONE donated entry
+        computation (engine.fused.build_fused_step): `new_x` uploads as a
+        donated copy, the current payload is donated and threaded back out
+        (aliased), and the restacked envelope is staged as the pending
+        payload without ever touching the host."""
+        if self.fused:
+            entry, tabs = self._fused_entry("step")
+            nd = self._donatable(new_x, jnp.float32)
+            xd = self._donatable(self._x_pad, jnp.float32)
+            drift, changed, x_new, x_out = entry(nd, xd, tabs)
+            self._x_pad = x_out
+            self._pending_x_pad = x_new
+            self.launch_log.append(("step", entry.key))
+            return (np.asarray(drift, np.float64), np.asarray(changed, bool))
         t = self.tables
         aa = self._aa
         if self._x_ref_pad is None:
@@ -206,6 +351,8 @@ class DeviceEngine:
             raise RuntimeError(
                 "evaluate_device requires jax_enable_x64 (device f64 "
                 "accumulation); use evaluate() for host f64 accumulation")
+        if self.fused:
+            return self._evaluate_fused()
         t = self.tables
         aa = self._aa
         phi_flat = jnp.zeros(t.n_parts * t.n_bodies_max, jnp.float64)
@@ -223,9 +370,15 @@ class DeviceEngine:
         device (`evaluate_device`) and the only host transfer is the final
         (N,) potential; otherwise each phase's padded f32 value tables are
         accumulated in host float64 (identical precision to the reference
-        executors, which is what pins the engine against them)."""
+        executors, which is what pins the engine against them).
+
+        Fused mode is one donated launch either way; without x64 the fused
+        program can only accumulate in device f32 — marginally looser than
+        this host-f64 path (tight-tolerance equivalence holds under x64)."""
         if jax.config.jax_enable_x64:
             return np.asarray(self.evaluate_device())
+        if self.fused:
+            return np.asarray(self._evaluate_fused(), np.float64)
         t = self.tables
         phi_flat = np.zeros(t.n_parts * t.n_bodies_max)
         for idx, valid, vals in self._phase_values():

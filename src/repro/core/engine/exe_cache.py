@@ -1,0 +1,124 @@
+"""AOT executable cache: compile once per *shape class*, serve forever.
+
+The fused engine (repro.core.engine.fused) lowers one donated XLA program
+per geometry — by far the dominant serving cost for a NEW geometry at
+small-to-medium N is that compilation, not the FLOPs.  But the compiled
+program depends only on the geometry's *shape class* (padded table dims,
+n_parts, table dtypes / the x64 flag, kernel-dispatch statics, backend),
+never on table *values*: every index table is a runtime argument.  Two
+geometries with equal shape-class keys lower to byte-identical programs, so
+the second one can skip XLA entirely.
+
+This module is that cache: `jax.jit(...).lower(...).compile()` products
+keyed by the shape-class key (see `fused.executable_key` — it folds in
+`schedules.shape_class_digest`), bounded by an LRU, with hit/miss/eviction
+counters surfaced on `FMMSession.exe_cache_stats`:
+
+  - `misses` counts actual XLA compilations — the "zero recompile per shape
+    class" acceptance tests pin it;
+  - `hits` counts engines served an already-compiled executable;
+  - every `CompiledEntry` carries a `calls` launch counter and the compiled
+    module's HLO text, which is what `analysis.hlo_walk.count_entry_launches`
+    pins the one-launch-per-evaluate guarantee against.
+
+The default process-wide cache (`GLOBAL_CACHE`) is deliberately shared
+across sessions: a serving fleet holding many tenants' `FMMSession`s pays
+one compile per shape class *for the whole process*, which is the
+multi-tenant story ROADMAP's FMM-as-a-service item builds on.  Pass a
+private `ExecutableCache` for isolated counters (benchmarks, tests).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+__all__ = ["CompiledEntry", "ExecutableCache", "GLOBAL_CACHE",
+           "resolve_cache", "DEFAULT_MAXSIZE"]
+
+DEFAULT_MAXSIZE = 32
+
+
+class CompiledEntry:
+    """One cached executable: the `Compiled` object plus its launch counter
+    and (lazily rendered) HLO text for launch-count pinning."""
+
+    __slots__ = ("key", "compiled", "calls", "_hlo")
+
+    def __init__(self, key, compiled):
+        self.key = key
+        self.compiled = compiled
+        self.calls = 0
+        self._hlo = None
+
+    @property
+    def hlo_text(self) -> str:
+        """Post-compilation HLO of this executable (one ENTRY computation —
+        `hlo_walk.count_entry_launches` counts exactly that)."""
+        if self._hlo is None:
+            self._hlo = self.compiled.as_text()
+        return self._hlo
+
+    def __call__(self, *args):
+        self.calls += 1
+        return self.compiled(*args)
+
+
+class ExecutableCache:
+    """LRU-bounded map: shape-class key -> `CompiledEntry`.
+
+    `get_or_compile` is the only population path, so `misses` is exactly
+    the number of XLA compilations this cache ever triggered.  Eviction
+    drops the least-recently-*resolved* entry (engines resolve their entry
+    once per lifetime, then hold a direct reference — an evicted entry keeps
+    working for engines already holding it; only *new* engines recompile).
+    """
+
+    def __init__(self, maxsize: int = DEFAULT_MAXSIZE):
+        if maxsize < 1:
+            raise ValueError(f"maxsize must be >= 1, got {maxsize}")
+        self.maxsize = int(maxsize)
+        self._entries: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get_or_compile(self, key, compile_fn) -> CompiledEntry:
+        """Serve the executable for `key`, compiling via `compile_fn()` (->
+        a `jax.stages.Compiled`) on first sight of the shape class."""
+        entry = self._entries.get(key)
+        if entry is not None:
+            self.hits += 1
+            self._entries.move_to_end(key)
+            return entry
+        self.misses += 1
+        entry = CompiledEntry(key, compile_fn())
+        self._entries[key] = entry
+        while len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+        return entry
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "size": len(self._entries),
+                "maxsize": self.maxsize}
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    def keys(self):
+        return list(self._entries)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key) -> bool:
+        return key in self._entries
+
+
+# Process-wide default: one compile per shape class per process, shared by
+# every session/engine that doesn't bring its own cache.
+GLOBAL_CACHE = ExecutableCache()
+
+
+def resolve_cache(cache: ExecutableCache | None) -> ExecutableCache:
+    return GLOBAL_CACHE if cache is None else cache

@@ -36,6 +36,7 @@ Conventions shared by every stacked table:
 """
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -43,7 +44,25 @@ import numpy as np
 from repro.core.plan import bucket_size
 
 __all__ = ["BatchedUpwardSchedule", "EngineTables", "build_batched_upward",
-           "build_engine_tables", "stack_bodies", "stack_reference_bodies"]
+           "build_engine_tables", "stack_bodies", "stack_reference_bodies",
+           "shape_class_digest"]
+
+
+def shape_class_digest(tables: dict) -> str:
+    """Digest of a flat {name: array} table set's *shape class*: every
+    entry's name, dtype and shape — never its values.  Two geometries with
+    equal digests lower to identical fused programs (`engine.fused`), which
+    is what lets `exe_cache.ExecutableCache` serve the second one without
+    touching XLA.  Hash the arrays **as they will be fed to the program**
+    (the memoized device views): jax canonicalizes int64 host tables to
+    int32 when x64 is off, so the device dtype — not the host dtype — is
+    the compiled program's signature."""
+    h = hashlib.sha1()
+    for name in sorted(tables):
+        a = tables[name]
+        h.update(f"{name}:{np.dtype(a.dtype).name}:{tuple(a.shape)};"
+                 .encode())
+    return h.hexdigest()
 
 
 # ---------------------------------------------------------------- helpers --

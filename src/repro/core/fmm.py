@@ -62,7 +62,16 @@ def device_hook(asarray):
 
     Contract: the hook must return a *device* array (`jax.Array`) — returning
     a NumPy view would silently re-upload on every kernel call, defeating the
-    memoization the hook exists for, so it raises instead."""
+    memoization the hook exists for, so it raises instead.
+
+    Donation-vs-residency contract (the fused tier's mirror image): views
+    served by the hook are memoized and shared across callers, so they must
+    NEVER be donated to a launch — XLA deletes donated buffers after the
+    call, and the memo would keep serving the dead view.  Only per-call
+    payload buffers (fresh `jnp.array` copies, or previous donated-launch
+    outputs) may be donated; `engine.DeviceEngine._donatable` raises
+    `TypeError` on a memo-resident view (`DeviceMemo.is_resident`), exactly
+    as this wrapper raises on a host-returning hook."""
     if asarray is None:
         return jnp.asarray
 

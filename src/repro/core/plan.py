@@ -1,7 +1,7 @@
 """Interaction plans: the plan/execute split for the FMM host pipeline.
 
-Architecture: plan -> schedule -> engine
-----------------------------------------
+Architecture: plan -> schedule -> engine -> executable cache
+------------------------------------------------------------
 Every FMM evaluation decomposes into two very different kinds of work —
 **plan construction** (this module: dual-tree traversal, pair-list padding
 and bucketing, leaf body-gather index tables, per-level upward/downward
@@ -48,10 +48,22 @@ independent axis of the paper plus the hardware floor:
      multipoles on device.  With x64 enabled the f64 phi accumulation also
      stays on device and returns a single (N,) array; otherwise f64
      accumulation happens once on the host at the API boundary.
-  4. `FMMSession` — orchestration: memoized device views, protocol sweeps
+  4. `engine.fused` + `engine.exe_cache` — the serving tier: the per-phase
+     launches collapse into ONE donated entry computation per warm
+     `evaluate()` / within-slack `step()` (`fused=` flag), and the
+     AOT-compiled executable (`jax.jit(...).lower(...).compile()`) is
+     cached by *shape class* — padded table dims, device dtypes/x64,
+     theta-bucket, backend, kernel statics (`schedules
+     .shape_class_digest`) — so a new geometry of an already-seen shape
+     class pays zero XLA compile time.  Donation-vs-residency contract:
+     memoized `DeviceMemo` table views are never donated (a donated buffer
+     is deleted, poisoning the memo); per-call payload buffers are always
+     donated and threaded through to outputs for input-output aliasing.
+  5. `FMMSession` — orchestration: memoized device views, protocol sweeps
      from a single evaluation, `.step(new_x)` MAC-slack revalidation that
-     rebuilds only invalidated partitions, and engine/reference dispatch
-     (`engine=` flag, default on when a device backend is present).
+     rebuilds only invalidated partitions, engine/reference dispatch
+     (`engine=` flag, default on when a device backend is present) and the
+     fused/per-phase knob (`fused=`, `exe_cache_stats`).
 
 A plan is built once and executed many times — time-stepped N-body where
 geometry changes slowly, or protocol sweeps over the same partitioning —

@@ -46,7 +46,28 @@ _BLOCK_CACHE: dict[tuple[int, int, int], int] = {}
 # serving fleets — skip the sweep entirely.  Interpret-mode heuristics are
 # free to recompute and are never persisted, so CPU test runs touch no disk.
 # Opt out with REPRO_P2P_CACHE=0; relocate with REPRO_P2P_CACHE_PATH.
+#
+# Degradation contract: the disk cache is an optimization, NEVER a
+# correctness or liveness dependency.  An unreadable/unwritable location
+# (read-only container fs, $HOME on a squashed image, a path under a file)
+# warns ONCE, flips the process to in-memory-only operation and never
+# touches the disk again — a mid-benchmark run must not crash or spam.
 _PERSIST_LOADED = False
+_PERSIST_BROKEN = False
+
+
+def _cache_io_failed(action: str, exc: BaseException) -> None:
+    """First disk failure: one RuntimeWarning, then in-memory-only mode."""
+    global _PERSIST_BROKEN
+    if _PERSIST_BROKEN:
+        return
+    _PERSIST_BROKEN = True
+    import warnings
+    warnings.warn(
+        f"p2p autotune cache disabled: could not {action} "
+        f"{_persist_path()!r} ({exc!r}); continuing with the in-memory "
+        f"cache only (set REPRO_P2P_CACHE_PATH to a writable location or "
+        f"REPRO_P2P_CACHE=0 to silence)", RuntimeWarning, stacklevel=3)
 
 
 def _persist_enabled() -> bool:
@@ -70,7 +91,12 @@ def _load_persisted(backend: str) -> None:
     try:
         with open(_persist_path()) as f:
             data = json.load(f)
-    except (OSError, ValueError):
+    except FileNotFoundError:
+        return                       # cold cache: normal, silent
+    except ValueError:
+        return                       # corrupt file: the next save rewrites it
+    except OSError as exc:           # unreadable location: warn once, degrade
+        _cache_io_failed("read", exc)
         return
     for k, v in data.get(backend, {}).items():
         try:
@@ -83,8 +109,9 @@ def _load_persisted(backend: str) -> None:
 
 
 def _save_persisted(backend: str, key: tuple, choice: int) -> None:
-    """Read-merge-write (atomic rename); persistence failures are silent —
-    the cache is an optimization, never a correctness dependency."""
+    """Read-merge-write (atomic rename); an unwritable location warns once
+    (`_cache_io_failed`) and flips to in-memory-only — the cache is an
+    optimization, never a correctness dependency."""
     path = _persist_path()
     try:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
@@ -98,8 +125,8 @@ def _save_persisted(backend: str, key: tuple, choice: int) -> None:
         with open(tmp, "w") as f:
             json.dump(data, f, indent=1, sort_keys=True)
         os.replace(tmp, path)
-    except OSError:
-        pass
+    except OSError as exc:
+        _cache_io_failed("write", exc)
 
 
 def _p2p_kernel(q_ref, xs_ref, xt_ref, out_ref):
@@ -177,9 +204,10 @@ def best_block_t(S: int, n_pairs: int, T: int = TB, *,
     small on-disk JSON keyed (backend, shape class) — see `_persist_path` /
     REPRO_P2P_CACHE — so repeat runs skip the warmup sweep."""
     key = (int(S), int(n_pairs), int(T))
-    persist = not interpret and _persist_enabled()
+    persist = not interpret and _persist_enabled() and not _PERSIST_BROKEN
     if persist:
         _load_persisted(jax.default_backend())
+        persist = not _PERSIST_BROKEN    # load may have just broken it
     hit = _BLOCK_CACHE.get(key)
     if hit is not None:
         return hit

@@ -52,6 +52,33 @@ def test_batched_upward_matches_per_partition(seed, n_parts, ncrit):
                                    rtol=1e-6, atol=1e-7)
 
 
+@given(st.integers(0, 10_000), st.integers(1, 3), st.integers(32, 64))
+@settings(max_examples=4, deadline=None)
+def test_fused_matches_per_phase_property(seed, n_parts, ncrit):
+    """The fused one-launch composite must match the per-phase engine at
+    the tight x64 tolerances for ANY geometry the planner produces — ragged
+    partitions, ragged bucket sets, m2p present or absent.  Every example is
+    its own shape class (an XLA compile), so the example budget stays small;
+    x64 keeps both paths on device f64 accumulation."""
+    import jax
+    from repro.core.api import PartitionSpec, plan_geometry
+    from repro.core.engine import DeviceEngine, ExecutableCache
+    rng = np.random.default_rng(seed)
+    x = make_distribution("plummer", 300, seed=seed)
+    q = rng.uniform(-1, 1, 300)
+    geo = plan_geometry(x, q, PartitionSpec(nparts=n_parts, ncrit=ncrit))
+    jax.config.update("jax_enable_x64", True)
+    try:
+        want = np.asarray(DeviceEngine(geo, use_kernels=False,
+                                       fused=False).evaluate_device())
+        got = np.asarray(DeviceEngine(geo, use_kernels=False, fused=True,
+                                      exe_cache=ExecutableCache())
+                         .evaluate_device())
+    finally:
+        jax.config.update("jax_enable_x64", False)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=2e-5)
+
+
 @given(st.integers(0, 5_000))
 @settings(max_examples=6, deadline=None)
 def test_batched_upward_empty_sentinel_partitions(seed):

@@ -51,6 +51,22 @@ def test_walker_exact_on_known_module():
     assert "WALK_OK" in out.stdout, (out.stdout[-500:], out.stderr[-2000:])
 
 
+def test_count_entry_launches():
+    """Launch counting over compiled HLO: one ENTRY per executable, additive
+    over concatenated executables, and zero on StableHLO (`lowered.as_text()`
+    has no ENTRY headers — the docstring's feed-compiled-HLO caveat)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.analysis.hlo_walk import count_entry_launches
+    sds = jax.ShapeDtypeStruct((8,), jnp.float32)
+    lowered = jax.jit(lambda a: a * 2.0 + 1.0).lower(sds)
+    hlo = lowered.compile().as_text()
+    assert count_entry_launches(hlo) == 1
+    assert count_entry_launches(hlo + "\n" + hlo) == 2     # two dispatches
+    assert count_entry_launches(lowered.as_text()) == 0    # StableHLO
+    assert count_entry_launches("") == 0
+
+
 def test_collective_byte_parser_units():
     from repro.analysis.hlo_walk import _shape_list, _nbytes
     shapes = _shape_list("bf16[16,1024,128]{2,1,0} f32[8]")

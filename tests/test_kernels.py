@@ -128,6 +128,7 @@ def _fake_measured_autotune(monkeypatch, tmp_path):
     monkeypatch.delenv("REPRO_P2P_CACHE", raising=False)
     monkeypatch.setattr(kp, "_BLOCK_CACHE", {})
     monkeypatch.setattr(kp, "_PERSIST_LOADED", False)
+    monkeypatch.setattr(kp, "_PERSIST_BROKEN", False)
     calls = []
     clock = iter(np.arange(0.0, 1000.0, 0.5))
 
@@ -182,3 +183,43 @@ def test_autotune_interpret_mode_never_touches_disk(monkeypatch, tmp_path):
     assert kp.best_block_t(64, 3, 32, interpret=True) in kp.BLOCK_CANDIDATES
     assert not (tmp_path / "cache.json").exists()
     assert kp._PERSIST_LOADED is False  # load path skipped entirely
+
+
+def test_autotune_unwritable_cache_degrades_warn_once(monkeypatch, tmp_path):
+    """An unusable cache location (here: a path UNDER a regular file, the
+    read-only-container shape chmod can't fake for root) must warn exactly
+    once, flip to in-memory-only operation, keep autotuning correctly and
+    never warn or touch disk again — the disk cache is an optimization,
+    not a liveness dependency."""
+    import warnings
+    kp, calls = _fake_measured_autotune(monkeypatch, tmp_path)
+    blocker = tmp_path / "blocker"
+    blocker.write_text("i am a file, not a cache directory")
+    monkeypatch.setenv("REPRO_P2P_CACHE_PATH", str(blocker / "cache.json"))
+
+    def sweep(S):
+        sample = (jnp.zeros((2, S), jnp.float32),
+                  jnp.zeros((2, S, 3), jnp.float32),
+                  jnp.zeros((2, 40, 3), jnp.float32))
+        return kp.best_block_t(S, 2, 40, interpret=False, sample=sample)
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        choice = sweep(64)
+    assert choice in kp.BLOCK_CANDIDATES          # degraded, still correct
+    assert kp._PERSIST_BROKEN is True
+    runtime_ws = [x for x in w if issubclass(x.category, RuntimeWarning)]
+    assert len(runtime_ws) == 1
+    assert "p2p autotune cache disabled" in str(runtime_ws[0].message)
+    assert "REPRO_P2P_CACHE" in str(runtime_ws[0].message)  # remediation hint
+
+    # a second shape class: measured in-memory, NO second warning, and the
+    # in-memory cache still serves repeats without re-measuring
+    with warnings.catch_warnings(record=True) as w2:
+        warnings.simplefilter("always")
+        c2 = sweep(128)
+        calls.clear()
+        assert sweep(128) == c2                   # in-memory hit
+        assert calls == []
+    assert not [x for x in w2 if issubclass(x.category, RuntimeWarning)]
+    assert not blocker.is_dir()                   # disk was never touched
