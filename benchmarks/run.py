@@ -13,9 +13,9 @@ import os
 import sys
 import traceback
 
-from benchmarks import (fig6_granularity, fig7_protocols, fig8_weak,
-                        host_side, kernel_bench, partition_quality,
-                        roofline_table, table3_hsdx)
+from benchmarks import (fig6_granularity, fig7_protocols, fig8_exchange,
+                        fig8_weak, host_side, kernel_bench,
+                        partition_quality, roofline_table, table3_hsdx)
 
 MODULES = [
     ("host_side (plan vs loop geometry)", host_side),
@@ -24,6 +24,7 @@ MODULES = [
     ("table3_hsdx (Table 3)", table3_hsdx),
     ("fig7_protocols (Fig 7)", fig7_protocols),
     ("fig8_weak (Fig 8)", fig8_weak),
+    ("fig8_exchange (dist LET exchange, measured vs LogGP)", fig8_exchange),
     ("kernel_bench (bucketed P2P/attn/WKV + engine sweep)", kernel_bench),
     ("roofline_table (§Roofline)", roofline_table),
 ]

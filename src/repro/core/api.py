@@ -595,7 +595,9 @@ class FMMSession:
     def __init__(self, geometry: GeometryPlan, engine: bool | None = None,
                  use_kernels: bool | None = None,
                  use_pallas: bool | None = None,
-                 fused: bool | None = None, exe_cache=None):
+                 fused: bool | None = None, exe_cache=None,
+                 mesh=None, dist_protocol: str = "bulk",
+                 dist_grain_bytes: int | None = None):
         from repro.core.engine import (default_engine_enabled,
                                        default_use_kernels)
         if use_pallas is not None:      # deprecated alias, warn-once + honor
@@ -611,7 +613,14 @@ class FMMSession:
                             else bool(use_kernels))
         self.fused = fused               # None -> default_fused_enabled()
         self.exe_cache = exe_cache       # None -> process-wide GLOBAL_CACHE
+        self.mesh = mesh                 # 1-D mesh -> dist exchange dispatch
+        if dist_protocol not in ("bulk", "grain", "hsdx"):
+            raise ValueError(f"unknown dist_protocol {dist_protocol!r}; "
+                             "expected 'bulk', 'grain' or 'hsdx'")
+        self.dist_protocol = dist_protocol
+        self.dist_grain_bytes = dist_grain_bytes
         self._engine = None
+        self._dist = None
         self._memo = DeviceMemo()
         self._comm_cache: dict = {}
         self._phi: np.ndarray | None = None
@@ -623,10 +632,14 @@ class FMMSession:
                     use_kernels: bool | None = None,
                     use_pallas: bool | None = None,
                     fused: bool | None = None, exe_cache=None,
+                    mesh=None, dist_protocol: str = "bulk",
+                    dist_grain_bytes: int | None = None,
                     **overrides) -> "FMMSession":
         return cls(plan_geometry(x, q, spec, **overrides), engine=engine,
                    use_kernels=use_kernels, use_pallas=use_pallas,
-                   fused=fused, exe_cache=exe_cache)
+                   fused=fused, exe_cache=exe_cache, mesh=mesh,
+                   dist_protocol=dist_protocol,
+                   dist_grain_bytes=dist_grain_bytes)
 
     @property
     def geometry(self) -> GeometryPlan:
@@ -652,6 +665,28 @@ class FMMSession:
                                         fused=self.fused,
                                         exe_cache=self.exe_cache)
         return self._engine
+
+    @property
+    def dist(self):
+        """The session's `ShardedEngine` (mesh dispatch), built on first
+        access; None without a mesh.  Rebuilt automatically after a step
+        that rebuilds any partition (structure changed)."""
+        if self.mesh is None:
+            return None
+        if self._dist is None or self._dist.geo is not self._geo:
+            from repro.core.dist import ShardedEngine
+            self._dist = ShardedEngine(self._geo, self.mesh,
+                                       grain_bytes=self.dist_grain_bytes)
+        return self._dist
+
+    @property
+    def exchange_stats(self) -> dict:
+        """Per-rank wire accounting of the session's dist protocol (measured
+        moved/delivered bytes, rounds, padding) + its LogGP prediction."""
+        if self.mesh is None:
+            raise RuntimeError("exchange_stats needs a mesh-backed session "
+                               "(FMMSession(mesh=...))")
+        return self.dist.exchange_stats(self.dist_protocol)
 
     @property
     def exe_cache_stats(self) -> dict:
@@ -690,7 +725,9 @@ class FMMSession:
         read-only: it is shared by every SessionResult of this geometry
         version, so in-place mutation would corrupt the cache — copy it to
         post-process."""
-        if self.engine_enabled:
+        if self.mesh is not None:
+            phi = self.dist.evaluate(self.dist_protocol)
+        elif self.engine_enabled:
             phi = self.engine.evaluate()
         else:
             phi = execute_geometry(self._geo, use_kernels=self.use_kernels,
@@ -808,8 +845,14 @@ class FMMSession:
         if rebuilt:                         # bytes matrix / adjacency changed
             self._comm_cache.clear()
             self._engine = None             # structure changed: tables stale
-        elif self._engine is not None:
-            self._engine.refresh_payload(self._geo, use_pending=use_dev)
+            self._dist = None               # wire layout / spans changed too
+        else:
+            if self._engine is not None:
+                self._engine.refresh_payload(self._geo, use_pending=use_dev)
+            if self._dist is not None:
+                # dist recomputes multipoles AND LET wire payloads on device
+                # from the restacked (x, q) — no host LET refresh needed
+                self._dist.refresh_payload(self._geo)
         return report
 
     @staticmethod

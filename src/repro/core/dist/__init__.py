@@ -1,0 +1,38 @@
+"""Multi-device exchange engine: the paper's LET protocols on real wires.
+
+The fourth pipeline tier made distributed: `plan_geometry` (host geometry)
+-> `schedule_comm` (modeled protocol schedules) -> **dist exchange** (this
+package: the modeled schedule executed as `shard_map` collective programs)
+-> engine phase kernels per rank.
+
+  layout.py   : one shared pool word space over every inter-rank LET span —
+                52 f32 words per cell / 8 per body, so span bytes equal
+                `GeometryPlan.bytes_matrix` exactly — plus per-rank
+                pack/unpack gather tables;
+  programs.py : bulk all_to_all, grain-chunked ppermute rounds, and the
+                HSDX relay tree, each built from (and asserted equal to)
+                the `protocols.Schedule` the LogGP model costs;
+  engine.py   : `ShardedEngine` — the batched engine's stacked envelopes
+                sharded over a 1-D mesh, exchange wedged between the upward
+                pass and the far field, halo-mapped M2L/M2P/P2P, host f64
+                accumulation identical to `DeviceEngine.evaluate`.
+
+Entry points: `launch.mesh.host_device_mesh(n)` for a CPU mesh (CI runs on
+`--xla_force_host_platform_device_count=4`), `api.FMMSession(mesh=...)` for
+session-level dispatch, `benchmarks/fig8_exchange.py` for measured-vs-LogGP
+exchange timings.
+"""
+from repro.core.dist.engine import ShardedEngine
+from repro.core.dist.layout import (CELL_WORDS, BODY_WORDS, WireLayout,
+                                    WireTables, build_wire_layout,
+                                    build_wire_tables)
+from repro.core.dist.programs import (DIST_PROTOCOLS, ExchangeProgram, Round,
+                                      apply_exchange, build_exchange_program,
+                                      predicted_time, rank_schedule,
+                                      round_tables)
+
+__all__ = ["ShardedEngine", "CELL_WORDS", "BODY_WORDS", "WireLayout",
+           "WireTables", "build_wire_layout", "build_wire_tables",
+           "DIST_PROTOCOLS", "ExchangeProgram", "Round", "apply_exchange",
+           "build_exchange_program", "predicted_time", "rank_schedule",
+           "round_tables"]

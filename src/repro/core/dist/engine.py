@@ -1,0 +1,447 @@
+"""ShardedEngine: the batched FMM engine distributed over a shard_map mesh.
+
+Partitions are grouped into contiguous blocks of `nparts / n_ranks` per mesh
+rank; every stacked `(n_parts, ...)` envelope of the single-device engine is
+sharded on its leading axis, so each rank runs the *same* phase kernels the
+`DeviceEngine` runs — on its own partitions only — with one new step wedged
+between the upward pass and the far field:
+
+  1. upward (local)   : `engine.upward.batched_upward_kernel` on the rank's
+                        (P_r, ...) slice — bitwise-identical per partition;
+  2. pack + EXCHANGE  : gather the dynamic words (multipoles, bodies) of
+                        every LET span this rank originates into the shared
+                        pool (`dist.layout`), then run one protocol's
+                        collective program (`dist.programs`) — bulk
+                        all_to_all, grain-chunked ppermute rounds, or the
+                        HSDX relay tree;
+  3. far field + P2P  : M2L/M2P/P2P tables whose remote sources point into
+                        the received *halo* rows (`M_src = [local | halo]`),
+                        then the same downward sweep / leaf evaluation.
+
+Each phase returns the engine's padded f32 value tables; the host f64
+accumulation is identical to `DeviceEngine.evaluate`'s non-x64 path, which
+is what pins phi parity (the acceptance tolerance) across all protocols.
+
+The compute tables differ from `engine.schedules.build_engine_tables` only
+in id spaces: targets are rank-local (`j_local * Cmax + c`), co-resident
+senders stay direct reads, and off-rank senders index the halo block
+appended after the rank's own cells/bodies.  Everything crossing the wire is
+f32 words of the frozen LET format, so the bytes each collective carries are
+exactly `GeometryPlan.bytes_matrix` aggregated to rank granularity —
+asserted at program build time and again in tests.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dist import programs as prog_mod
+from repro.core.dist.layout import build_wire_layout, build_wire_tables
+from repro.core.fmm import _p2p_vals
+from repro.core.multipole import get_operators
+
+__all__ = ["ShardedEngine"]
+
+# padded-row fills that keep every masked lane finite: a zero displacement /
+# coincident target-center pair would send the kernel's 1/r derivatives to
+# inf, and inf * 0-mask is NaN
+_SAFE_D = np.array([1.0, 0.0, 0.0], np.float32)
+_FAR_CENTER = np.array([1e6, 1e6, 1e6], np.float32)
+
+
+def _pad_rank_rows(rows: dict, cap: int, fills: dict) -> dict:
+    out = {}
+    n = len(next(iter(rows.values()))) if rows else 0
+    for k, a in rows.items():
+        if n == cap:
+            out[k] = a
+            continue
+        pad = np.broadcast_to(fills[k], (cap - n,) + a.shape[1:]).astype(
+            a.dtype)
+        out[k] = np.concatenate([a, pad], axis=0) if n else pad.copy()
+    return out
+
+
+class ShardedEngine:
+    """Multi-device evaluation of one `GeometryPlan` over a 1-D mesh.
+
+    Parameters
+    ----------
+    geometry : api.GeometryPlan (nparts must divide evenly over the mesh)
+    mesh : a 1-D `jax.sharding.Mesh` (e.g. `launch.mesh.host_device_mesh`)
+    grain_bytes : chunk size of the "grain" protocol's ppermute rounds;
+        default the LogGP eager limit (the granularity the paper tunes
+        around, Fig 6).
+    """
+
+    def __init__(self, geometry, mesh, *, grain_bytes: int | None = None):
+        from repro.core.engine.schedules import (build_batched_upward,
+                                                 stack_bodies)
+        if len(mesh.axis_names) != 1:
+            raise ValueError("ShardedEngine needs a 1-D mesh; got axes "
+                             f"{mesh.axis_names}")
+        self.geo = geometry
+        self.mesh = mesh
+        self.axis = mesh.axis_names[0]
+        self.n_ranks = int(np.prod(mesh.devices.shape))
+        self.grain_bytes = grain_bytes
+        self._ops = get_operators(geometry.p)
+
+        up = build_batched_upward(geometry.trees, geometry.scheds)
+        self.up = up
+        P, Cmax, Nmax = up.n_parts, up.n_cells_max, up.n_bodies_max
+        self.layout = build_wire_layout(geometry, self.n_ranks)
+        self.wire = build_wire_tables(geometry, self.layout,
+                                      n_cells_max=Cmax, n_bodies_max=Nmax,
+                                      nk=self._ops.nk)
+        self._build_compute_tables()
+        self._x_pad, self._q_pad = stack_bodies(geometry.trees, Nmax)
+        self._programs: dict = {}
+        self._fns: dict = {}
+        self._ex_fns: dict = {}
+
+    # ------------------------------------------------------------- tables --
+    def _build_compute_tables(self) -> None:
+        geo, up = self.geo, self.up
+        lay, wire = self.layout, self.wire
+        D, ppr = lay.n_ranks, lay.parts_per_rank
+        P, Cmax, Nmax = up.n_parts, up.n_cells_max, up.n_bodies_max
+        nk = self._ops.nk
+
+        m2l_rk = [{"src": [], "tgt": [], "mask": [], "d": []}
+                  for _ in range(D)]
+        m2p_rk = [{"b": [], "mask": [], "centers": [], "t_idx": [],
+                   "t_valid": []} for _ in range(D)]
+        buckets_rk: list = [dict() for _ in range(D)]
+
+        def add_m2l(r, inter, tgt_off, src_map):
+            n = inter.n_m2l
+            if n:
+                m2l_rk[r]["tgt"].append(tgt_off + inter.m2l_a[:n])
+                m2l_rk[r]["src"].append(src_map(inter.m2l_b[:n]))
+                m2l_rk[r]["mask"].append(inter.m2l_mask[:n])
+                m2l_rk[r]["d"].append(inter.m2l_d[:n])
+
+        def add_m2p(r, inter, body_off, src_map):
+            n = inter.n_m2p
+            if n:
+                m2p_rk[r]["b"].append(src_map(inter.m2p_b[:n]))
+                m2p_rk[r]["mask"].append(inter.m2p_mask[:n])
+                m2p_rk[r]["centers"].append(inter.m2p_centers[:n])
+                m2p_rk[r]["t_idx"].append(body_off + inter.m2p_t_idx[:n])
+                m2p_rk[r]["t_valid"].append(inter.m2p_t_valid[:n])
+
+        def add_p2p(r, inter, tgt_off, s_map):
+            for blk in inter.p2p_blocks:
+                n = blk.n
+                key = (blk.t_idx.shape[1], blk.s_idx.shape[1])
+                rows = buckets_rk[r].setdefault(
+                    key, {"t_idx": [], "t_valid": [], "s_idx": [],
+                          "s_valid": [], "mask": []})
+                rows["t_idx"].append(tgt_off + blk.t_idx[:n])
+                rows["t_valid"].append(blk.t_valid[:n])
+                rows["s_idx"].append(s_map(blk.s_idx[:n], blk.s_valid[:n]))
+                rows["s_valid"].append(blk.s_valid[:n])
+                rows["mask"].append(blk.mask[:n])
+
+        for j, recv in enumerate(geo.receivers):
+            if recv is None:
+                continue
+            r, jl = j // ppr, j % ppr
+            coff, boff = jl * Cmax, jl * Nmax
+            add_m2l(r, recv.local, coff, lambda b, o=coff: o + b)
+            add_p2p(r, recv.local, boff, lambda s, v, o=boff: o + s)
+            for rb in recv.remote:
+                i = rb.sender
+                let = geo.lets[(i, j)]
+                if lay.part_rank[i] == r:
+                    # co-resident sender: read its device cells/bodies
+                    # directly, exactly like the single-device engine
+                    cs, bs = let.cell_src, let.body_src
+                    soff_c = (i % ppr) * Cmax
+                    soff_b = (i % ppr) * Nmax
+                    add_m2l(r, rb.inter, coff,
+                            lambda b, cs=cs, o=soff_c: o + cs[b])
+                    add_m2p(r, rb.inter, boff,
+                            lambda b, cs=cs, o=soff_c: o + cs[b])
+                    add_p2p(r, rb.inter, boff,
+                            lambda s, v, bs=bs, o=soff_b:
+                            np.where(v, o + bs[np.where(v, s, 0)], 0))
+                else:
+                    # off-rank sender: graft-local ids index the received
+                    # halo rows appended after this rank's own block
+                    hco = ppr * Cmax + wire.halo_cell_off[(i, j)]
+                    hbo = ppr * Nmax + wire.halo_body_off[(i, j)]
+                    add_m2l(r, rb.inter, coff, lambda b, o=hco: o + b)
+                    add_m2p(r, rb.inter, boff, lambda b, o=hco: o + b)
+                    add_p2p(r, rb.inter, boff,
+                            lambda s, v, o=hbo: np.where(v, o + s, 0))
+
+        def cat(rows):
+            return {k: np.concatenate(v, axis=0) for k, v in rows.items()}
+
+        # ---- m2l: (D, Bm) stacked, NaN-safe padded ------------------------
+        m2l_cat = [cat(r) if r["src"] else None for r in m2l_rk]
+        m2l_cap = max((len(r["src"]) for r in m2l_cat if r), default=0)
+        m2l_fill = {"src": np.int64(0), "tgt": np.int64(0),
+                    "mask": np.float32(0.0), "d": _SAFE_D}
+        m2l_stk = {k: [] for k in m2l_fill}
+        for r in range(D):
+            rows = _pad_rank_rows(m2l_cat[r] or {
+                "src": np.zeros(0, np.int64), "tgt": np.zeros(0, np.int64),
+                "mask": np.zeros(0, np.float32),
+                "d": np.zeros((0, 3), np.float32)}, m2l_cap, m2l_fill)
+            for k in m2l_stk:
+                m2l_stk[k].append(rows[k])
+        self.m2l = {k: np.stack(v) for k, v in m2l_stk.items()} \
+            if m2l_cap else None
+
+        # ---- m2p: (D, Bf, ...) ------------------------------------------
+        wt = up.tables["leaf_idx"].shape[2]
+        m2p_cat = [cat(r) if r["b"] else None for r in m2p_rk]
+        m2p_cap = max((len(r["b"]) for r in m2p_cat if r), default=0)
+        m2p_fill = {"b": np.int64(0), "mask": np.float32(0.0),
+                    "centers": _FAR_CENTER, "t_idx": np.int64(0),
+                    "t_valid": np.False_}
+        m2p_stk = {k: [] for k in m2p_fill}
+        for r in range(D):
+            rows = _pad_rank_rows(m2p_cat[r] or {
+                "b": np.zeros(0, np.int64), "mask": np.zeros(0, np.float32),
+                "centers": np.zeros((0, 3), np.float32),
+                "t_idx": np.zeros((0, wt), np.int64),
+                "t_valid": np.zeros((0, wt), bool)}, m2p_cap, m2p_fill)
+            for k in m2p_stk:
+                m2p_stk[k].append(rows[k])
+        self.m2p = {k: np.stack(v) for k, v in m2p_stk.items()} \
+            if m2p_cap else None
+
+        # ---- p2p: globally sorted width classes, rows padded per rank ----
+        keys = sorted({k for br in buckets_rk for k in br})
+        self.p2p_buckets = []
+        for key in keys:
+            wt_b, ws_b = key
+            fill = {"t_idx": np.int64(0), "t_valid": np.False_,
+                    "s_idx": np.int64(0), "s_valid": np.False_,
+                    "mask": np.float32(0.0)}
+            empty = {"t_idx": np.zeros((0, wt_b), np.int64),
+                     "t_valid": np.zeros((0, wt_b), bool),
+                     "s_idx": np.zeros((0, ws_b), np.int64),
+                     "s_valid": np.zeros((0, ws_b), bool),
+                     "mask": np.zeros(0, np.float32)}
+            per_rank = [cat(buckets_rk[r][key]) if key in buckets_rk[r]
+                        else empty for r in range(D)]
+            cap = max(len(p["mask"]) for p in per_rank)
+            stk = {k: np.stack([_pad_rank_rows(p, cap, fill)[k]
+                                for p in per_rank]) for k in fill}
+            self.p2p_buckets.append(stk)
+
+        # ---- host accumulation indices -----------------------------------
+        self._l2p_idx = (up.tables["leaf_idx"]
+                         + (np.arange(P, dtype=np.int64)
+                            * Nmax)[:, None, None])
+        self._l2p_valid = up.tables["leaf_valid"]
+        rank_body_off = (np.arange(D, dtype=np.int64)
+                         * ppr * Nmax)[:, None, None]
+        self._bucket_gidx = [b["t_idx"] + rank_body_off
+                             for b in self.p2p_buckets]
+        self._m2p_gidx = (self.m2p["t_idx"] + rank_body_off
+                          if self.m2p is not None else None)
+        orig_chunks, flat_chunks = [], []
+        for j, t in enumerate(geo.trees):
+            if t is None:
+                continue
+            orig_chunks.append(geo.owners[j][t.perm])
+            flat_chunks.append(j * Nmax + np.arange(len(t.x), dtype=np.int64))
+        self._orig_idx = np.concatenate(orig_chunks)
+        self._flat_idx = np.concatenate(flat_chunks)
+
+        # ---- shard_map input pytrees (int32 on the wire side) ------------
+        ut = up.tables
+        self._part_tabs = {k: ut[k] for k in
+                           ("leaves", "leaf_mask", "leaf_centers", "leaf_idx",
+                            "leaf_valid", "up_ids", "up_parents", "up_mask",
+                            "up_d", "down_ids", "down_parents", "down_mask",
+                            "down_d")}
+        rt = {"pool_template": wire.pool_template,
+              "pack_src": wire.pack_src, "pack_dst": wire.pack_dst,
+              "halo_M_idx": wire.halo_M_idx, "halo_x_idx": wire.halo_x_idx,
+              "halo_q_idx": wire.halo_q_idx}
+        if self.m2l is not None:
+            for k, v in self.m2l.items():
+                rt[f"m2l_{k}"] = v
+        if self.m2p is not None:
+            for k, v in self.m2p.items():
+                rt[f"m2p_{k}"] = v
+        for bi, b in enumerate(self.p2p_buckets):
+            for k, v in b.items():
+                rt[f"pb{bi}_{k}"] = v
+        self._rank_tabs = rt
+
+    # ----------------------------------------------------------- programs --
+    def program(self, protocol: str) -> prog_mod.ExchangeProgram:
+        if protocol not in self._programs:
+            self._programs[protocol] = prog_mod.build_exchange_program(
+                self.layout, protocol, grain_bytes=self.grain_bytes)
+        return self._programs[protocol]
+
+    def exchange_stats(self, protocol: str) -> dict:
+        """Measured wire accounting of one protocol's program plus the LogGP
+        prediction for the schedule it executes."""
+        p = self.program(protocol)
+        s = p.stats()
+        s["loggp_time"] = prog_mod.predicted_time(p)
+        s["rank_bytes"] = self.layout.rank_bytes.tolist()
+        return s
+
+    # ------------------------------------------------------------ program --
+    def _shard_fn(self, protocol: str):
+        if protocol in self._fns:
+            return self._fns[protocol]
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as PS
+        from repro.core.engine.upward import batched_upward_kernel
+
+        ops = self._ops
+        program = self.program(protocol)
+        axis = self.axis
+        Cmax = self.up.n_cells_max
+        ppr = self.layout.parts_per_rank
+        nk = ops.nk
+        n_buckets = len(self.p2p_buckets)
+        has_m2l = self.m2l is not None
+        has_m2p = self.m2p is not None
+
+        def rank_fn(x, q, pt, rt, rtabs):
+            # x (ppr, Nmax, 3) f32, q (ppr, Nmax) f32 — this rank's slice
+            M = batched_upward_kernel(
+                ops, x, q, pt["leaves"], pt["leaf_mask"], pt["leaf_centers"],
+                pt["leaf_idx"], pt["leaf_valid"], pt["up_ids"],
+                pt["up_parents"], pt["up_mask"], pt["up_d"], n_cells=Cmax)
+            M_flat = M.reshape(ppr * Cmax, nk)
+            # pack the dynamic words of every originated span, then exchange
+            src_vec = jnp.concatenate([M_flat.reshape(-1), x.reshape(-1),
+                                       q.reshape(-1)])
+            pool = rt["pool_template"][0]
+            pool = pool.at[rt["pack_dst"][0]].set(src_vec[rt["pack_src"][0]])
+            pool = prog_mod.apply_exchange(pool, program, rtabs, axis)
+            M_halo = pool[rt["halo_M_idx"][0]]
+            x_halo = pool[rt["halo_x_idx"][0]]
+            q_halo = pool[rt["halo_q_idx"][0]]
+
+            # far field over [local | halo] sources
+            M_src = jnp.concatenate([M_flat, M_halo], axis=0)
+            L_flat = jnp.zeros((ppr * Cmax, nk), jnp.float32)
+            if has_m2l:
+                contrib = ops.m2l_v(M_src[rt["m2l_src"][0]],
+                                    rt["m2l_d"][0]) \
+                    * rt["m2l_mask"][0][:, None]
+                L_flat = L_flat.at[rt["m2l_tgt"][0]].add(contrib)
+            L = L_flat.reshape(ppr, Cmax, nk)
+
+            def l2l_one(Lp, ids, parents, mask, d):
+                return Lp.at[ids].add(ops.l2l_v(Lp[parents], d)
+                                      * mask[:, None])
+
+            for lvl in range(pt["down_ids"].shape[1]):
+                L = jax.vmap(l2l_one)(L, pt["down_ids"][:, lvl],
+                                      pt["down_parents"][:, lvl],
+                                      pt["down_mask"][:, lvl],
+                                      pt["down_d"][:, lvl])
+
+            def l2p_one(Lp, xp, lf, lm, lc, li):
+                return ops.l2p_v(Lp[lf], xp[li], lc) * lm[:, None]
+
+            outs = [jax.vmap(l2p_one)(L, x, pt["leaves"], pt["leaf_mask"],
+                                      pt["leaf_centers"], pt["leaf_idx"])]
+
+            x_flat = x.reshape(-1, 3)
+            q_flat = q.reshape(-1)
+            x_src = jnp.concatenate([x_flat, x_halo], axis=0)
+            q_src = jnp.concatenate([q_flat, q_halo], axis=0)
+            for bi in range(n_buckets):
+                t_idx = rt[f"pb{bi}_t_idx"][0]
+                s_idx = rt[f"pb{bi}_s_idx"][0]
+                qs = jnp.where(rt[f"pb{bi}_s_valid"][0], q_src[s_idx], 0.0)
+                outs.append(_p2p_vals(x_flat[t_idx], x_src[s_idx], qs,
+                                      rt[f"pb{bi}_mask"][0]))
+            if has_m2p:
+                outs.append(ops.m2p_v(M_src[rt["m2p_b"][0]],
+                                      x_flat[rt["m2p_t_idx"][0]],
+                                      rt["m2p_centers"][0])
+                            * rt["m2p_mask"][0][:, None])
+            return tuple(outs)
+
+        spec = PS(axis)
+        n_outs = 1 + n_buckets + (1 if has_m2p else 0)
+        fn = jax.jit(shard_map(
+            rank_fn, mesh=self.mesh, in_specs=(spec,) * 5,
+            out_specs=(spec,) * n_outs, check_rep=False))
+        self._fns[protocol] = fn
+        return fn
+
+    # ----------------------------------------------------------- evaluate --
+    def evaluate(self, protocol: str = "bulk") -> np.ndarray:
+        """Full potential in original body order (float64, host) — the
+        rank-sharded phases run under `shard_map`, phi accumulates in host
+        f64 exactly like `DeviceEngine.evaluate`'s non-x64 path."""
+        fn = self._shard_fn(protocol)
+        outs = fn(self._x_pad, self._q_pad, self._part_tabs, self._rank_tabs,
+                  prog_mod.round_tables(self.program(protocol)))
+        up = self.up
+        P, Nmax = up.n_parts, up.n_bodies_max
+        phi_flat = np.zeros(P * Nmax)
+        np.add.at(phi_flat, self._l2p_idx.ravel(),
+                  np.where(self._l2p_valid.ravel(),
+                           np.asarray(outs[0], np.float64).ravel(), 0.0))
+        for gidx, bucket, vals in zip(self._bucket_gidx, self.p2p_buckets,
+                                      outs[1:1 + len(self.p2p_buckets)]):
+            np.add.at(phi_flat, gidx.ravel(),
+                      np.where(bucket["t_valid"].ravel(),
+                               np.asarray(vals, np.float64).ravel(), 0.0))
+        if self.m2p is not None:
+            np.add.at(phi_flat, self._m2p_gidx.ravel(),
+                      np.where(self.m2p["t_valid"].ravel(),
+                               np.asarray(outs[-1], np.float64).ravel(),
+                               0.0))
+        phi = np.zeros(self.geo.n)
+        phi[self._orig_idx] = phi_flat[self._flat_idx]
+        return phi
+
+    def refresh_payload(self, geometry) -> None:
+        """Rebind to a same-structure geometry (within-slack step): restack
+        the (x, q) payload only.  Multipoles and LET payloads are recomputed
+        on device from this payload each evaluation, so — unlike the
+        single-device engine — no host-side multipole/LET refresh is ever
+        needed here."""
+        from repro.core.engine.schedules import stack_bodies
+        self.geo = geometry
+        self._x_pad, self._q_pad = stack_bodies(geometry.trees,
+                                                self.up.n_bodies_max)
+
+    # ---------------------------------------------------------- benchmark --
+    def exchange_fn(self, protocol: str):
+        """A jitted shard_map program running ONLY pack + exchange (no FMM
+        phases) — what `benchmarks/fig8_exchange.py` times against the LogGP
+        prediction.  Returns `fn()` -> (D,) per-rank pool checksums (the
+        reduction defeats dead-code elimination)."""
+        if protocol in self._ex_fns:
+            return self._ex_fns[protocol]
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as PS
+        program = self.program(protocol)
+        axis = self.axis
+
+        def rank_ex(rt, rtabs):
+            pool = rt["pool_template"][0]
+            pool = prog_mod.apply_exchange(pool, program, rtabs, axis)
+            return jnp.sum(pool)[None]
+
+        fn = jax.jit(shard_map(
+            rank_ex, mesh=self.mesh, in_specs=(PS(axis),) * 2,
+            out_specs=PS(axis), check_rep=False))
+        tabs = {"pool_template": self.wire.pool_template}
+        rtabs = prog_mod.round_tables(program)
+        self._ex_fns[protocol] = lambda: fn(tabs, rtabs)
+        return self._ex_fns[protocol]

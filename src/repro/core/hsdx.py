@@ -7,6 +7,18 @@ target process a breadth-first comm tree is built over the adjacency graph
 `MPI_Neighbor_alltoallv`-style aggregated exchange per stage.  Edges are
 "hardwired" so relay load spreads evenly over direct neighbors — the uniform-
 grid balance bound is Eq (1):  NB = ceil((5^D - 3^D) / (3^D - 1)).
+
+Round/byte accounting (single source of truth with the real exchange)
+---------------------------------------------------------------------
+A `protocols.Schedule` *stage* is a sparse set of directed transfers; a
+device collective moves one buffer per rank per op, so a stage executes as
+one or more *rounds*, each a partial permutation of ranks (every rank sends
+at most once and receives at most once — exactly one `jax.lax.ppermute`).
+`decompose_rounds` is that decomposition, and it is shared verbatim by the
+modeled accounting (`protocols.schedule_stats`'s `n_rounds`) and the real
+multi-device exchange programs (`repro.core.dist.programs`), so the rounds
+the LogGP model charges for are the rounds the wire actually executes —
+tests assert the modeled per-edge bytes equal the bytes the programs move.
 """
 from __future__ import annotations
 
@@ -15,7 +27,7 @@ from collections import deque
 import numpy as np
 
 __all__ = ["adjacency_from_boxes", "nb_bound", "build_comm_tree",
-           "relay_routes", "graph_diameter"]
+           "relay_routes", "graph_diameter", "decompose_rounds"]
 
 
 def nb_bound(D: int = 3) -> int:
@@ -97,6 +109,40 @@ def relay_routes(adj: list[list[int]]) -> dict[tuple[int, int], list[int]]:
                 path.append(u)
             routes[(src, dst)] = path
     return routes
+
+
+def decompose_rounds(
+    edges: list[tuple[int, int]],
+) -> list[list[tuple[int, int]]]:
+    """Partition a directed edge set into *rounds*, each a partial
+    permutation: within a round every rank sends at most once and receives
+    at most once, so a round maps onto exactly one `jax.lax.ppermute`.
+
+    Greedy first-fit over the (deduplicated, sorted) edge list.  The result
+    is deterministic, covers every edge exactly once, and is what both the
+    modeled accounting (`protocols.schedule_stats` `n_rounds`) and the real
+    exchange programs (`repro.core.dist.programs`) execute — one source of
+    truth for "how many collectives does this stage cost".
+    """
+    remaining = sorted(set((int(u), int(v)) for (u, v) in edges))
+    if any(u == v for (u, v) in remaining):
+        raise ValueError("self-edge in round decomposition")
+    rounds: list[list[tuple[int, int]]] = []
+    while remaining:
+        srcs: set[int] = set()
+        dsts: set[int] = set()
+        rnd: list[tuple[int, int]] = []
+        rest: list[tuple[int, int]] = []
+        for (u, v) in remaining:
+            if u not in srcs and v not in dsts:
+                rnd.append((u, v))
+                srcs.add(u)
+                dsts.add(v)
+            else:
+                rest.append((u, v))
+        rounds.append(rnd)
+        remaining = rest
+    return rounds
 
 
 def graph_diameter(adj: list[list[int]]) -> int:

@@ -1,7 +1,7 @@
 """Interaction plans: the plan/execute split for the FMM host pipeline.
 
-Architecture: plan -> schedule -> engine -> executable cache
-------------------------------------------------------------
+Architecture: plan -> schedule -> dist exchange -> engine -> executable cache
+-----------------------------------------------------------------------------
 Every FMM evaluation decomposes into two very different kinds of work —
 **plan construction** (this module: dual-tree traversal, pair-list padding
 and bucketing, leaf body-gather index tables, per-level upward/downward
@@ -39,7 +39,16 @@ independent axis of the paper plus the hardware floor:
      function over the frozen bytes matrix and Lemma-1 adjacency boxes
      (protocols.py), so sweeping all four exchange protocols reuses one
      `GeometryPlan` with zero re-extraction.
-  3. `engine.DeviceEngine(geometry)` — the execution tier: payload-
+  3. `repro.core.dist` — the exchange tier: when a `shard_map` mesh is
+     present (`FMMSession(mesh=...)`; `launch.mesh.host_device_mesh(n)` for
+     virtual CPU devices), the stacked envelopes shard over a 1-D rank axis
+     and the CommSchedule's modeled transfers execute as real collective
+     programs — bulk `all_to_all`, granularity-tuned `ppermute` rounds, or
+     the HSDX relay tree — over a frozen wire layout whose span bytes equal
+     the `GeometryPlan` bytes matrix exactly (layout.py / programs.py /
+     engine.ShardedEngine).  Without a mesh this tier is skipped and the
+     schedules remain LogGP-modeled only.
+  4. `engine.DeviceEngine(geometry)` — the execution tier: payload-
      independent stacked index tables compiled once per geometry, LET
      indices translated to sender-global device ids (no LET payload ever
      materializes on the host).  Within-slack timesteps upload ONE new_x
@@ -48,7 +57,7 @@ independent axis of the paper plus the hardware floor:
      multipoles on device.  With x64 enabled the f64 phi accumulation also
      stays on device and returns a single (N,) array; otherwise f64
      accumulation happens once on the host at the API boundary.
-  4. `engine.fused` + `engine.exe_cache` — the serving tier: the per-phase
+  5. `engine.fused` + `engine.exe_cache` — the serving tier: the per-phase
      launches collapse into ONE donated entry computation per warm
      `evaluate()` / within-slack `step()` (`fused=` flag), and the
      AOT-compiled executable (`jax.jit(...).lower(...).compile()`) is
@@ -59,11 +68,12 @@ independent axis of the paper plus the hardware floor:
      memoized `DeviceMemo` table views are never donated (a donated buffer
      is deleted, poisoning the memo); per-call payload buffers are always
      donated and threaded through to outputs for input-output aliasing.
-  5. `FMMSession` — orchestration: memoized device views, protocol sweeps
+  6. `FMMSession` — orchestration: memoized device views, protocol sweeps
      from a single evaluation, `.step(new_x)` MAC-slack revalidation that
      rebuilds only invalidated partitions, engine/reference dispatch
-     (`engine=` flag, default on when a device backend is present) and the
-     fused/per-phase knob (`fused=`, `exe_cache_stats`).
+     (`engine=` flag, default on when a device backend is present), the
+     fused/per-phase knob (`fused=`, `exe_cache_stats`), and multi-device
+     dispatch (`mesh=`, `dist_protocol=`, `exchange_stats`).
 
 A plan is built once and executed many times — time-stepped N-body where
 geometry changes slowly, or protocol sweeps over the same partitioning —

@@ -32,7 +32,7 @@ import numpy as np
 from repro.core import hsdx as hsdx_mod
 
 __all__ = ["LogGPParams", "Schedule", "make_schedule", "simulate_delivery",
-           "schedule_stats", "loggp_time", "PROTOCOLS"]
+           "schedule_stats", "schedule_edge_bytes", "loggp_time", "PROTOCOLS"]
 
 PROTOCOLS = ("alltoallv", "nbx", "pairwise", "hsdx")
 
@@ -182,6 +182,20 @@ def simulate_delivery(sched: Schedule) -> dict[tuple[int, int], int]:
     return delivered
 
 
+def schedule_edge_bytes(sched: Schedule) -> np.ndarray:
+    """Modeled per-edge wire traffic: E[u, v] = bytes rank u sends directly
+    to rank v summed over all stages (relayed payloads count at every hop).
+
+    This is the single source of truth the real exchange programs
+    (`repro.core.dist.programs`) are built from — tests assert the bytes a
+    program's collectives actually carry equal this matrix exactly."""
+    E = np.zeros((sched.nparts, sched.nparts), dtype=np.int64)
+    for stage in sched.stages:
+        for t in stage:
+            E[t.src, t.dst] += int(t.nbytes)
+    return E
+
+
 def schedule_stats(sched: Schedule) -> dict:
     msgs = sum(len(st) for st in sched.stages)
     wire_bytes = sum(t.nbytes for st in sched.stages for t in st)
@@ -202,9 +216,14 @@ def schedule_stats(sched: Schedule) -> dict:
             per_dst[t.dst] = per_dst.get(t.dst, 0) + 1
         if per_dst:
             max_inbox = max(max_inbox, max(per_dst.values()))
+    # n_rounds: device-collective rounds (one ppermute per partial
+    # permutation) — the same decomposition the real exchange executes.
+    n_rounds = sum(
+        len(hsdx_mod.decompose_rounds([(t.src, t.dst) for t in st]))
+        for st in sched.stages if st)
     return dict(n_stages=sched.n_stages, n_msgs=msgs, wire_bytes=wire_bytes,
                 payload_bytes=payload_bytes, relay_factor=wire_bytes / max(payload_bytes, 1),
-                max_msgs_per_dst_stage=max_inbox)
+                max_msgs_per_dst_stage=max_inbox, n_rounds=n_rounds)
 
 
 def loggp_time(sched: Schedule, prm: LogGPParams | None = None,

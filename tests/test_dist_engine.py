@@ -1,0 +1,241 @@
+"""Multi-device exchange engine (repro.core.dist).
+
+Host-side invariants (wire layout, round decomposition, program byte
+accounting) run in-process; phi parity of the three exchange protocols
+against the single-device engine runs on 4 virtual host devices in a
+subprocess, so the main test process keeps a single device.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import protocols as proto
+from repro.core.api import PartitionSpec, plan_geometry
+from repro.core.dist import (DIST_PROTOCOLS, build_exchange_program,
+                             build_wire_layout)
+from repro.core.hsdx import decompose_rounds
+
+RTOL, ATOL = 1e-6, 2e-5
+
+
+def _clustered_problem():
+    """Duplicated sites -> >= 3 of 8 morton partitions empty (inf/-inf
+    sentinel boxes cross the wire)."""
+    pts = np.array([[.1, .1, .1], [.8, .2, .3], [.3, .9, .5],
+                    [.6, .6, .9], [.9, .9, .1]])
+    x = np.repeat(pts, 60, axis=0)
+    q = np.random.default_rng(1).uniform(-1, 1, len(x))
+    return x, q
+
+
+def _elongated_geo(nparts=8):
+    """Stretched slab: rank adjacency diameter >= 2, so HSDX must relay."""
+    rng = np.random.default_rng(3)
+    x = rng.uniform(0, 1, (800, 3))
+    x[:, 0] *= 4.0
+    q = rng.uniform(-1, 1, 800)
+    return plan_geometry(x, q, PartitionSpec(nparts=nparts, method="morton",
+                                             ncrit=64))
+
+
+# ------------------------------------------------ round decomposition -----
+def test_decompose_rounds_is_partition_of_partial_permutations():
+    rng = np.random.default_rng(0)
+    for trial in range(20):
+        D = int(rng.integers(2, 9))
+        edges = {(int(u), int(v)) for u in range(D) for v in range(D)
+                 if u != v and rng.random() < 0.5}
+        rounds = decompose_rounds(edges)
+        flat = [e for rnd in rounds for e in rnd]
+        assert sorted(flat) == sorted(edges)          # exact cover, no dupes
+        for rnd in rounds:
+            srcs = [u for u, _ in rnd]
+            dsts = [v for _, v in rnd]
+            assert len(set(srcs)) == len(srcs)        # <=1 send per rank
+            assert len(set(dsts)) == len(dsts)        # <=1 recv per rank
+        # a partial permutation per round => at least max-degree rounds
+        if edges:
+            deg = np.zeros(D, np.int64)
+            for (u, v) in edges:
+                deg[u] += 1
+            assert len(rounds) >= deg.max()
+
+
+def test_decompose_rounds_rejects_self_edges():
+    with pytest.raises(ValueError):
+        decompose_rounds([(1, 1)])
+
+
+def test_decompose_rounds_matches_schedule_stats():
+    """`schedule_stats` n_rounds and the real programs decompose the same
+    edge lists — single source of truth."""
+    geo = _elongated_geo()
+    layout = build_wire_layout(geo, 4)
+    for name in ("alltoallv", "hsdx"):
+        sched = proto.make_schedule(name, layout.rank_bytes,
+                                    boxes=layout.rank_boxes)
+        want = sum(len(decompose_rounds([(t.src, t.dst) for t in st]))
+                   for st in sched.stages if st)
+        assert proto.schedule_stats(sched)["n_rounds"] == want
+
+
+# ------------------------------------------------------- wire layout -----
+def test_wire_layout_bytes_match_geometry_plan():
+    """Span word counts x 4 == the frozen `GeometryPlan.bytes_matrix`, and
+    rank_bytes is its inter-rank block aggregation with a zero diagonal."""
+    x, q = _clustered_problem()
+    geo = plan_geometry(x, q, PartitionSpec(nparts=8, method="morton",
+                                            ncrit=64))
+    layout = build_wire_layout(geo, 4)
+    B = geo.bytes_matrix
+    for (i, j) in layout.pairs:
+        assert layout.part_rank[i] != layout.part_rank[j]
+        assert layout.span_words[(i, j)] * 4 == B[i, j]
+    assert layout.total_words == sum(layout.span_words.values())
+
+    want = np.zeros((4, 4), np.int64)
+    for i in range(8):
+        for j in range(8):
+            ri, rj = layout.part_rank[i], layout.part_rank[j]
+            if ri != rj:
+                want[ri, rj] += B[i, j]
+    np.testing.assert_array_equal(layout.rank_bytes, want)
+    assert np.all(np.diag(layout.rank_bytes) == 0)
+
+
+def test_wire_layout_rejects_uneven_grouping():
+    x, q = _clustered_problem()
+    geo = plan_geometry(x, q, PartitionSpec(nparts=8, method="morton"))
+    with pytest.raises(ValueError):
+        build_wire_layout(geo, 3)          # 8 % 3 != 0
+
+
+# ------------------------------------------------- exchange programs -----
+def test_program_bytes_equal_modeled_schedule():
+    """For every protocol: bytes put on the wire == the Schedule's edge
+    bytes (what LogGP costs), and delivered bytes == rank_bytes exactly."""
+    geo = _elongated_geo()
+    layout = build_wire_layout(geo, 4)
+    off = layout.rank_bytes * (1 - np.eye(4, dtype=np.int64))
+    for name in DIST_PROTOCOLS:
+        prog = build_exchange_program(layout, name)
+        np.testing.assert_array_equal(prog.moved_bytes,
+                                      proto.schedule_edge_bytes(prog.sched))
+        np.testing.assert_array_equal(prog.delivered_bytes, off)
+        if name != "hsdx":               # direct protocols never relay
+            np.testing.assert_array_equal(prog.moved_bytes,
+                                          prog.delivered_bytes)
+
+
+def test_hsdx_relays_through_neighbors():
+    """On a stretched slab the HSDX relay tree moves strictly more bytes
+    than it delivers (store-and-forward), in fewer rounds than grain."""
+    layout = build_wire_layout(_elongated_geo(), 4)
+    prog = build_exchange_program(layout, "hsdx")
+    assert prog.moved_bytes.sum() > prog.delivered_bytes.sum()
+    assert prog.n_rounds == proto.schedule_stats(prog.sched)["n_rounds"]
+
+
+def test_grain_rounds_scale_with_grain_bytes():
+    layout = build_wire_layout(_elongated_geo(), 4)
+    coarse = build_exchange_program(layout, "grain", grain_bytes=8192)
+    fine = build_exchange_program(layout, "grain", grain_bytes=2048)
+    assert fine.n_rounds > coarse.n_rounds
+    np.testing.assert_array_equal(fine.delivered_bytes,
+                                  coarse.delivered_bytes)
+
+
+# ------------------------------------------- 4-device parity subprocess -----
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import json
+    import numpy as np
+    from repro.core.api import FMMSession, PartitionSpec, plan_geometry
+    from repro.core.engine import DeviceEngine
+    from repro.launch.mesh import ensure_host_device_count, host_device_mesh
+
+    mesh = host_device_mesh(4)
+    out = {}
+
+    def parity(geo):
+        ref = DeviceEngine(geo, use_kernels=False, fused=False).evaluate()
+        errs = {}
+        for p in ("bulk", "grain", "hsdx"):
+            sess = FMMSession(geo, mesh=mesh, dist_protocol=p)
+            phi = sess.evaluate()
+            ok = bool(np.allclose(phi, ref, rtol=1e-6, atol=2e-5))
+            errs[p] = [ok, float(np.max(np.abs(phi - ref)))]
+        return errs
+
+    # dense slab: every rank pair talks, HSDX relays
+    rng = np.random.default_rng(3)
+    x = rng.uniform(0, 1, (800, 3)); x[:, 0] *= 4.0
+    q = rng.uniform(-1, 1, 800)
+    geo = plan_geometry(x, q, PartitionSpec(nparts=8, method="morton",
+                                            ncrit=64))
+    out["slab"] = parity(geo)
+
+    # duplicated sites: empty partitions (inf/-inf sentinels) on the wire
+    pts = np.array([[.1, .1, .1], [.8, .2, .3], [.3, .9, .5],
+                    [.6, .6, .9], [.9, .9, .1]])
+    x = np.repeat(pts, 60, axis=0)
+    q = np.random.default_rng(1).uniform(-1, 1, len(x))
+    geo = plan_geometry(x, q, PartitionSpec(nparts=8, method="morton",
+                                            ncrit=64))
+    out["empty_parts"] = [int(p) for p in range(8)
+                          if len(geo.owners[p]) == 0]
+    out["clustered"] = parity(geo)
+
+    # session-level surfaces: exchange_stats + within-slack step refresh
+    sess = FMMSession(geo, mesh=mesh, dist_protocol="bulk")
+    st = sess.exchange_stats
+    out["stats_keys"] = sorted(st)[:4]
+    out["stats_rounds"] = int(st["n_rounds"])
+
+    # asking for more host devices after jax initialised must raise clearly
+    try:
+        ensure_host_device_count(16)
+        out["late_grow"] = "no error"
+    except RuntimeError as e:
+        out["late_grow"] = "RuntimeError" if "initial" in str(e).lower() \
+            or "device" in str(e).lower() else str(e)
+
+    print(json.dumps(out))
+""").strip()
+
+
+@pytest.fixture(scope="module")
+def dist_results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", _SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.parametrize("case", ["slab", "clustered"])
+@pytest.mark.parametrize("protocol", DIST_PROTOCOLS)
+def test_protocol_phi_parity_on_4_devices(dist_results, case, protocol):
+    ok, err = dist_results[case][protocol]
+    assert ok, (f"{protocol} phi mismatch vs single-device engine on "
+                f"{case}: max abs err {err:.3e}")
+
+
+def test_sentinels_crossed_the_wire(dist_results):
+    assert len(dist_results["empty_parts"]) >= 3
+
+
+def test_session_exchange_stats(dist_results):
+    assert dist_results["stats_rounds"] >= 1
+
+
+def test_host_device_count_grow_after_init_raises(dist_results):
+    assert dist_results["late_grow"] == "RuntimeError"
