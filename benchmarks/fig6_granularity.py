@@ -36,3 +36,27 @@ def run(n: int = 4000, nparts: int = 8):
         rows.append((f"fig6_grain_{dist}", base_us,
                      f"best_grain={best};{curve}"))
     return rows
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.host_side import write_bench_json
+    json_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "BENCH_fig6_granularity.json")
+    for a in sys.argv[1:]:
+        if a.startswith("--json="):
+            json_path = a.split("=", 1)[1]
+        elif a == "--no-json":
+            json_path = None
+    rows = run(n=int(os.environ.get("FIG6_N", "4000")),
+               nparts=int(os.environ.get("FIG6_PARTS", "8")))
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}", flush=True)
+    if json_path:
+        where = write_bench_json(rows, json_path,
+                                 meta={"module": "fig6_granularity"})
+        print(f"# wrote {where}", file=sys.stderr)

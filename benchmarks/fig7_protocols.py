@@ -48,9 +48,26 @@ def run(n: int = 6000, parts=(8, 16, 32)):
 
 if __name__ == "__main__":
     import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.host_side import write_bench_json
+    json_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "BENCH_fig7_protocols.json")
+    for a in sys.argv[1:]:
+        if a.startswith("--json="):
+            json_path = a.split("=", 1)[1]
+        elif a == "--no-json":
+            json_path = None
     n = int(os.environ.get("FIG7_N", "6000"))
     parts = tuple(int(s) for s in
                   os.environ.get("FIG7_PARTS", "8,16,32").split(","))
+    rows = run(n=n, parts=parts)
     print("name,us_per_call,derived")
-    for name, us, derived in run(n=n, parts=parts):
+    for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}", flush=True)
+    if json_path:
+        where = write_bench_json(rows, json_path,
+                                 meta={"module": "fig7_protocols",
+                                       "n": n, "parts": list(parts)})
+        print(f"# wrote {where}", file=sys.stderr)

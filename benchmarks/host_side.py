@@ -141,16 +141,43 @@ def _fused_engine_rows(n, nparts, theta, ncrit):
     ]
 
 
+def _common_meta() -> dict:
+    """The metadata header every BENCH_*.json carries (ISSUE 8 satellite):
+    enough provenance to interpret a number months later — which commit,
+    which backend, which jax, whether x64 was on, and when."""
+    import datetime
+    import subprocess
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10).stdout.strip()
+    except Exception:
+        sha = ""
+    try:
+        import jax
+        backend = jax.default_backend()
+        jax_version = jax.__version__
+        x64 = bool(jax.config.jax_enable_x64)
+    except Exception:
+        backend, jax_version, x64 = "", "", False
+    return {"git_sha": sha or "unknown", "backend": backend,
+            "jax_version": jax_version, "x64": x64,
+            "timestamp": datetime.datetime.now(
+                datetime.timezone.utc).isoformat()}
+
+
 def write_bench_json(rows, path, meta=None) -> str:
     """Persist benchmark rows as machine-readable BENCH_*.json (atomic
     rename), so the perf trajectory is tracked across PRs instead of
     scrolling away in CI logs.  Schema: {schema, unix_time, meta,
-    rows: [{name, us_per_call, derived}]}."""
+    rows: [{name, us_per_call, derived}]}.  `meta` is merged over the
+    `_common_meta` provenance header shared by every benchmark."""
     import json
     payload = {
         "schema": "repro-bench-v1",
         "unix_time": time.time(),
-        "meta": dict(meta or {}),
+        "meta": {**_common_meta(), **dict(meta or {})},
         "rows": [{"name": name, "us_per_call": us, "derived": derived}
                  for name, us, derived in rows],
     }

@@ -36,3 +36,27 @@ def run(n: int = 6000, nparts: int = 16):
                          f";balance={rep['balance']:.3f}"
                          f";let_MB={res.bytes_matrix.sum()/1e6:.2f}"))
     return rows
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.host_side import write_bench_json
+    json_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "BENCH_partition_quality.json")
+    for a in sys.argv[1:]:
+        if a.startswith("--json="):
+            json_path = a.split("=", 1)[1]
+        elif a == "--no-json":
+            json_path = None
+    rows = run(n=int(os.environ.get("PARTQ_N", "6000")),
+               nparts=int(os.environ.get("PARTQ_PARTS", "16")))
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}", flush=True)
+    if json_path:
+        where = write_bench_json(rows, json_path,
+                                 meta={"module": "partition_quality"})
+        print(f"# wrote {where}", file=sys.stderr)

@@ -41,3 +41,26 @@ def run(n: int = 8000):
                      f"hsdx_ms={t_hsdx*1e3:.3f};a2a_ms={t_a2a*1e3:.3f};"
                      f"enhancement={enh:.1f}%;stages={res.n_stages}"))
     return rows
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.host_side import write_bench_json
+    json_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "BENCH_table3_hsdx.json")
+    for a in sys.argv[1:]:
+        if a.startswith("--json="):
+            json_path = a.split("=", 1)[1]
+        elif a == "--no-json":
+            json_path = None
+    rows = run(n=int(os.environ.get("TABLE3_N", "8000")))
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}", flush=True)
+    if json_path:
+        where = write_bench_json(rows, json_path,
+                                 meta={"module": "table3_hsdx"})
+        print(f"# wrote {where}", file=sys.stderr)

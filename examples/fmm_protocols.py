@@ -36,6 +36,41 @@ backend already initialized with fewer devices).  Then::
 (granularity-tuned ppermute rounds) or "hsdx" (hierarchical relay); all
 three deliver bitwise-identical potentials to the single-device engine.
 `main()` below runs the sweep when multiple devices are visible.
+
+The session flight recorder
+---------------------------
+Every tier is instrumented through `repro.obs`; turn it on before the
+work you want recorded and read the result with one call::
+
+    from repro import obs
+    obs.configure(enabled=True)      # or REPRO_TRACE=1 in the environment
+    sess = FMMSession.from_points(x, q, PartitionSpec(nparts=8), mesh=mesh)
+    sess.evaluate()
+    rep = sess.report()              # one structured dict
+    rep["timings"]                   #   wall time per span (plan.*,
+                                     #   engine.*, dist.evaluate, ...)
+    rep["exchange"]["protocols"]     #   per-protocol measured exchange time
+                                     #   vs LogGP -> "model_drift" (1.0 =
+                                     #   the model still predicts the wire)
+    rep["launches"]                  #   entry-computation counts per fused
+                                     #   executable (warm evaluate == 1)
+    rep["metrics"]["counters"]       #   memo/cache/donation/autotune counts
+
+To see where the milliseconds went on a timeline, export the chrome
+trace and load it in Perfetto::
+
+    import json
+    with open("trace.json", "w") as f:
+        json.dump(obs.get_tracer().to_chrome_trace(), f)
+
+then open https://ui.perfetto.dev (or chrome://tracing) and drop
+`trace.json` onto it — spans appear as nested slices per thread, instant
+events (autotune decisions, exchange probes, cache compiles) as markers.
+`obs.configure(enabled=True, fences=True)` additionally fences span
+boundaries with `block_until_ready`, so per-phase spans measure device
+occupancy instead of async dispatch (leave it off to preserve the fused
+path's single-launch pipelining).  `main()` below prints a per-protocol
+drift line when tracing is on.
 """
 import numpy as np
 
@@ -85,6 +120,19 @@ def main():
                   f" moved={st['moved_bytes']/1e6:.3f}MB"
                   f" delivered={st['delivered_bytes']/1e6:.3f}MB"
                   f" parity={ok}")
+        # flight recorder: measured exchange vs the LogGP model, one call
+        from repro import obs
+        if obs.enabled():
+            dsess = FMMSession(sess.geometry, mesh=mesh)
+            rep = dsess.report()       # measures exchanges when tracing is on
+            for proto_name, st in rep["exchange"]["protocols"].items():
+                print(f"drift {proto_name:<6}"
+                      f" measured={st['measured_s']*1e3:.3f}ms"
+                      f" loggp={st['loggp_s']*1e3:.3f}ms"
+                      f" model_drift={st['model_drift']:.2f}")
+        else:
+            print("(REPRO_TRACE=1 adds measured-vs-LogGP model_drift via "
+                  "session.report())")
     else:
         print(f"({ndev} visible device(s); export XLA_FLAGS="
               f"--xla_force_host_platform_device_count=4 before python to "

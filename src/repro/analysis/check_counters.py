@@ -1,0 +1,131 @@
+"""Regression gate: a fresh `FMMSession.report()` vs pinned invariants.
+
+    PYTHONPATH=src python -m repro.analysis.check_counters --out obs-artifacts
+
+Builds a toy fused session plus a 4-virtual-device mesh session with
+tracing enabled and checks the load-bearing counters the repo's guarantees
+rest on (ISSUE 8 regression gate):
+
+  1. warm fused evaluate is EXACTLY one entry-computation launch
+     (`hlo_walk.count_entry_launches` over the compiled HLO);
+  2. a second same-shape-class geometry triggers ZERO new XLA compilations
+     (the executable-cache contract);
+  3. every dist protocol's exchange program delivers exactly the
+     rank-aggregated off-diagonal `GeometryPlan.bytes_matrix`;
+  4. each protocol's `model_drift` (measured / LogGP exchange time) is
+     finite and positive — the probe itself works.
+
+Exits nonzero on any violation, printing each check; writes the full
+`report()` JSON and the chrome trace as artifacts under `--out` so a CI
+failure ships the evidence.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def main() -> int:
+    # virtual devices must be configured before jax initializes a backend
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="directory for report JSON + chrome trace artifacts")
+    ap.add_argument("--n", type=int, default=800)
+    ap.add_argument("--nparts", type=int, default=8)
+    args = ap.parse_args()
+
+    import numpy as np
+    import jax
+
+    from repro import obs
+    obs.configure(enabled=True)
+
+    from repro.analysis.hlo_walk import count_entry_launches
+    from repro.core.api import FMMSession, PartitionSpec, plan_geometry
+    from repro.core.engine.exe_cache import ExecutableCache
+
+    failures: list[str] = []
+
+    def check(ok: bool, label: str) -> None:
+        print(f"{'ok  ' if ok else 'FAIL'} {label}")
+        if not ok:
+            failures.append(label)
+
+    rng = np.random.default_rng(11)
+    x = rng.normal(size=(args.n, 3))
+    q = rng.uniform(-1, 1, args.n)
+    spec = PartitionSpec(nparts=args.nparts, method="orb", ncrit=64)
+
+    # --- fused single-device invariants (private cache: isolated counters) -
+    cache = ExecutableCache()
+    sess = FMMSession(plan_geometry(x, q, spec), engine=True, fused=True,
+                      use_kernels=False, exe_cache=cache)
+    sess.evaluate()                       # cold: compile + launch
+    sess.evaluate()                       # warm: must be 1 entry launch
+    eng = sess.engine
+    (entry, _tabs) = eng._entries[("evaluate",
+                                   bool(jax.config.jax_enable_x64))]
+    check(count_entry_launches(entry.hlo_text) == 1,
+          "warm fused evaluate compiles to exactly 1 entry computation")
+
+    misses0 = cache.misses
+    sess2 = FMMSession(plan_geometry(x.copy(), q.copy(), spec), engine=True,
+                       fused=True, use_kernels=False, exe_cache=cache)
+    sess2.evaluate()
+    check(cache.misses == misses0,
+          "second same-shape-class geometry -> 0 new XLA compilations "
+          f"(misses {misses0} -> {cache.misses})")
+
+    # --- mesh-backed exchange invariants -----------------------------------
+    from jax.sharding import Mesh
+    devs = np.array(jax.devices()[:4])
+    if len(devs) < 4:
+        print(f"note: only {len(devs)} device(s) visible; set XLA_FLAGS="
+              "--xla_force_host_platform_device_count=4 before jax init")
+    mesh = Mesh(devs, ("rk",))
+    msess = FMMSession(plan_geometry(x, q, spec), mesh=mesh,
+                       dist_protocol="bulk")
+    rep = msess.report(measure_exchange=True, reps=2)
+
+    geo = msess.geometry
+    lay = msess.dist.layout
+    expect = int(lay.rank_bytes.sum())      # zero diagonal by construction
+    for name, st in rep["exchange"]["protocols"].items():
+        check(st["delivered_bytes"] == expect,
+              f"{name}: delivered_bytes {st['delivered_bytes']} == "
+              f"rank off-diagonal bytes matrix {expect}")
+        drift = st["model_drift"]
+        check(np.isfinite(drift) and drift > 0,
+              f"{name}: model_drift finite and positive ({drift:.3g})")
+    inter = int(sum(geo.bytes_matrix[i, j]
+                    for i in range(len(lay.part_rank))
+                    for j in range(len(lay.part_rank))
+                    if lay.part_rank[i] != lay.part_rank[j]))
+    check(inter == expect,
+          "rank_bytes aggregates GeometryPlan.bytes_matrix's inter-rank "
+          f"entries exactly ({inter} == {expect})")
+
+    # --- artifacts ---------------------------------------------------------
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+        rep_path = os.path.join(args.out, "session_report.json")
+        with open(rep_path, "w") as fh:
+            json.dump(rep, fh, indent=1, sort_keys=True, default=str)
+        tracer = obs.get_tracer()
+        trace_path = os.path.join(args.out, "session_trace.json")
+        with open(trace_path, "w") as fh:
+            json.dump(tracer.to_chrome_trace(), fh, default=str)
+        print(f"wrote {rep_path} and {trace_path}")
+
+    if failures:
+        print(f"\n{len(failures)} invariant violation(s)")
+        return 1
+    print("\nall counter invariants hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

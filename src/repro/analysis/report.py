@@ -92,11 +92,74 @@ def roofline_table(recs):
     return "\n".join(lines)
 
 
+def observability_section(rep: dict) -> str:
+    """§Observability markdown from a `FMMSession.report()` dict (or a JSON
+    file of one, e.g. the artifact `analysis/check_counters.py` writes)."""
+    lines = ["## §Observability — session flight recorder\n"]
+    o = rep.get("obs", {})
+    lines.append(f"tracing: {'on' if o.get('enabled') else 'off'}"
+                 f" · fences: {'on' if o.get('fences') else 'off'}"
+                 f" · events: {o.get('events', 0)}"
+                 f" · dropped: {o.get('dropped', 0)}\n")
+    timings = rep.get("timings", {})
+    if timings:
+        lines.append("| span | count | total ms | mean ms | max ms |")
+        lines.append("|---|---|---|---|---|")
+        for name in sorted(timings, key=lambda k: -timings[k]["total_s"]):
+            t = timings[name]
+            lines.append(f"| {name} | {t['count']} | {t['total_s']*1e3:.3f} "
+                         f"| {t['mean_s']*1e3:.3f} | {t['max_s']*1e3:.3f} |")
+        lines.append("")
+    ex = rep.get("exchange", {})
+    if ex.get("enabled") and ex.get("protocols"):
+        lines.append("| protocol | rounds | moved bytes | loggp ms "
+                     "| measured ms | model drift |")
+        lines.append("|---|---|---|---|---|---|")
+        for name, st in ex["protocols"].items():
+            meas = st.get("measured_s")
+            drift = st.get("model_drift")
+            loggp = st.get("loggp_s", st.get("loggp_time", 0.0))
+            meas_c = f"{meas*1e3:.3f}" if meas is not None else "–"
+            drift_c = f"{drift:.2f}" if drift is not None else "–"
+            lines.append(f"| {name} | {st.get('n_rounds', '–')} "
+                         f"| {st.get('moved_bytes', '–')} | {loggp*1e3:.3f} "
+                         f"| {meas_c} | {drift_c} |")
+        lines.append("")
+    counters = rep.get("metrics", {}).get("counters", {})
+    if counters:
+        lines.append("counters: "
+                     + " · ".join(f"{k}={int(v)}"
+                                  for k, v in sorted(counters.items())))
+        lines.append("")
+    ec = rep.get("exe_cache", {})
+    if ec:
+        lines.append(f"exe_cache: hits={ec.get('hits')} "
+                     f"misses={ec.get('misses')} "
+                     f"evictions={ec.get('evictions')} "
+                     f"size={ec.get('size')}")
+    la = rep.get("launches", {})
+    if la and la.get("enabled", True):
+        for kind, d in la.items():
+            if not isinstance(d, dict):
+                continue
+            lines.append(f"launches[{kind}]: calls={d['calls']} "
+                         f"entry_computations={d['entry_computations']}")
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--artifacts", default="artifacts")
     ap.add_argument("--section", default="all")
+    ap.add_argument("--obs", default=None,
+                    help="path to a FMMSession.report() JSON; renders the "
+                         "§Observability section from it")
     args = ap.parse_args()
+    if args.obs:
+        with open(args.obs) as fh:
+            print(observability_section(json.load(fh)))
+        if args.section == "obs":
+            return
     recs = load(args.artifacts)
     print("## §Dry-run — single pod (16x16 = 256 chips)\n")
     print(dryrun_table(recs, "1pod"))

@@ -64,6 +64,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import protocols as proto
 from repro.core.fmm import (_resolve_kernels, downward_pass, l2p_pass,
                             m2l_apply, m2p_apply, p2p_apply, upward_pass)
@@ -269,8 +270,16 @@ class DeviceMemo:
         hit = self._views.get(key)
         if hit is not None:
             self.hits += 1
+            obs.counter_add("memo.hits")
             return hit[1]
         self.misses += 1
+        obs.counter_add("memo.misses")
+        if obs.enabled():
+            a = np.asarray(arr)
+            obs.event("memo.upload", {"nbytes": int(a.nbytes),
+                                      "shape": list(a.shape),
+                                      "dtype": str(a.dtype if dtype is None
+                                                   else np.dtype(dtype))})
         # jnp.array (copy), not jnp.asarray: the CPU backend can alias the
         # host buffer on dtype-preserving uploads, which would keep replaced
         # arrays alive through the cached device view and defeat eviction
@@ -412,69 +421,83 @@ def plan_geometry(x, q, spec: PartitionSpec | None = None,
     q = np.asarray(q, dtype=np.float64)
     n = len(x)
     P = spec.nparts
-    part, boxes, adj_boxes = _partition(x, P, spec.method,
-                                        sfc_box_inflation=spec.sfc_box_inflation)
-    ops = get_operators(spec.p)
+    with obs.span("plan.geometry") as sp_plan:
+        with obs.span("plan.partition"):
+            part, boxes, adj_boxes = _partition(
+                x, P, spec.method, sfc_box_inflation=spec.sfc_box_inflation)
+        ops = get_operators(spec.p)
 
-    # --- completely local trees (local bounding box, tight cells; §3) ------
-    owners, trees, scheds, Ms = [], [], [], []
-    for pid in range(P):
-        idx = np.nonzero(part == pid)[0]
-        owners.append(idx)
-        if len(idx) == 0:
-            trees.append(None)
-            scheds.append(None)
-            Ms.append(None)
-            continue
-        t = build_tree(x[idx], q[idx], ncrit=spec.ncrit)
-        trees.append(t)
-        scheds.append(build_tree_schedules(t))
-        Ms.append(np.asarray(upward_pass(t, ops, sched=scheds[-1])))
+        # --- completely local trees (local bounding box, tight cells; §3) --
+        with obs.span("plan.trees"):
+            owners, trees, scheds, Ms = [], [], [], []
+            for pid in range(P):
+                idx = np.nonzero(part == pid)[0]
+                owners.append(idx)
+                if len(idx) == 0:
+                    trees.append(None)
+                    scheds.append(None)
+                    Ms.append(None)
+                    continue
+                t = build_tree(x[idx], q[idx], ncrit=spec.ncrit)
+                trees.append(t)
+                scheds.append(build_tree_schedules(t))
+                Ms.append(np.asarray(upward_pass(t, ops, sched=scheds[-1])))
 
-    # --- sender-initiated LET extraction: all remote boxes per sender in one
-    #     batched frontier pass; empty partitions neither send nor receive ---
-    lets: dict[tuple[int, int], LETData] = {}
-    B = np.zeros((P, P), dtype=np.int64)
-    for i in range(P):
-        if trees[i] is None:
-            continue
-        others = np.array([j for j in range(P)
-                           if j != i and trees[j] is not None], dtype=np.int64)
-        if len(others) == 0:
-            continue
-        for j, let in zip(others, extract_lets(trees[i], Ms[i],
-                                               boxes[others, 0],
-                                               boxes[others, 1], spec.theta)):
-            lets[(i, int(j))] = let
-            B[i, j] = let.nbytes
+        # --- sender-initiated LET extraction: all remote boxes per sender in
+        #     one batched frontier pass; empty partitions neither send nor
+        #     receive -----------------------------------------------------
+        with obs.span("plan.lets"):
+            lets: dict[tuple[int, int], LETData] = {}
+            B = np.zeros((P, P), dtype=np.int64)
+            for i in range(P):
+                if trees[i] is None:
+                    continue
+                others = np.array([j for j in range(P)
+                                   if j != i and trees[j] is not None],
+                                  dtype=np.int64)
+                if len(others) == 0:
+                    continue
+                for j, let in zip(others, extract_lets(trees[i], Ms[i],
+                                                       boxes[others, 0],
+                                                       boxes[others, 1],
+                                                       spec.theta)):
+                    lets[(i, int(j))] = let
+                    B[i, j] = let.nbytes
 
-    # --- receiver side: graft + traverse ONCE into frozen plans ------------
-    pad_cells = _geometry_pad_cells(trees)
-    receivers: list = []
-    for j in range(P):
-        if trees[j] is None:
-            receivers.append(None)
-            continue
-        t = trees[j]
-        local, local_margin = _plan_pair(t, t, spec.theta, False, backend,
-                                         pad_cells)
-        remote = [_remote_block(i, lets[(i, j)], t, spec.theta, backend,
-                                pad_cells)
-                  for i in range(P) if (i, j) in lets]
-        receivers.append(ReceiverPlan(
-            tree=t, sched=scheds[j], local=local,
-            local_margin=local_margin, remote=remote))
+        # --- receiver side: graft + traverse ONCE into frozen plans --------
+        with obs.span("plan.receivers"):
+            pad_cells = _geometry_pad_cells(trees)
+            receivers: list = []
+            for j in range(P):
+                if trees[j] is None:
+                    receivers.append(None)
+                    continue
+                t = trees[j]
+                local, local_margin = _plan_pair(t, t, spec.theta, False,
+                                                 backend, pad_cells)
+                remote = [_remote_block(i, lets[(i, j)], t, spec.theta,
+                                        backend, pad_cells)
+                          for i in range(P) if (i, j) in lets]
+                receivers.append(ReceiverPlan(
+                    tree=t, sched=scheds[j], local=local,
+                    local_margin=local_margin, remote=remote))
 
-    adj = adjacency_from_boxes(adj_boxes)
-    deg = float(np.max([len(a) for a in adj]))
-    return GeometryPlan(
-        spec=spec, n=n, x0=x.copy(), q0=q.copy(), x_ref=x.copy(), part=part,
-        owners=owners, boxes=boxes, adj_boxes=adj_boxes, trees=trees,
-        scheds=scheds, Ms=Ms, lets=lets, receivers=receivers, bytes_matrix=B,
-        adjacency_degree=deg, diameter=graph_diameter(adj),
-        slack=_slack_budget(P, spec.theta, receivers, lets),
-        partition_stats=dict(nparts=P, method=spec.method),
-    )
+        adj = adjacency_from_boxes(adj_boxes)
+        deg = float(np.max([len(a) for a in adj]))
+        obs.counter_add("plan.builds")
+        if obs.enabled():
+            sp_plan.set({"n": int(n), "nparts": int(P),
+                         "method": spec.method, "backend": backend,
+                         "let_bytes": int(B.sum())})
+        return GeometryPlan(
+            spec=spec, n=n, x0=x.copy(), q0=q.copy(), x_ref=x.copy(),
+            part=part, owners=owners, boxes=boxes, adj_boxes=adj_boxes,
+            trees=trees, scheds=scheds, Ms=Ms, lets=lets,
+            receivers=receivers, bytes_matrix=B,
+            adjacency_degree=deg, diameter=graph_diameter(adj),
+            slack=_slack_budget(P, spec.theta, receivers, lets),
+            partition_stats=dict(nparts=P, method=spec.method),
+        )
 
 
 # --------------------------------------------------------------- layer 2 ---
@@ -684,9 +707,20 @@ class FMMSession:
         """Per-rank wire accounting of the session's dist protocol (measured
         moved/delivered bytes, rounds, padding) + its LogGP prediction."""
         if self.mesh is None:
-            raise RuntimeError("exchange_stats needs a mesh-backed session "
-                               "(FMMSession(mesh=...))")
-        return self.dist.exchange_stats(self.dist_protocol)
+            # Deprecation note: before PR 8 this raised RuntimeError on
+            # mesh-less sessions while exe_cache_stats returned a dict; the
+            # stats surface is now uniformly non-raising — a structured
+            # disabled payload marks "no mesh" instead.
+            return {"enabled": False, "protocol": self.dist_protocol,
+                    "reason": "no mesh: pass FMMSession(mesh=...) for "
+                              "multi-device exchange accounting",
+                    "n_rounds": 0, "moved_bytes": 0, "delivered_bytes": 0,
+                    "padded_wire_bytes": 0, "per_rank_sent": [],
+                    "per_rank_recv": [], "grain_bytes": None,
+                    "loggp_time": 0.0, "rank_bytes": []}
+        st = dict(self.dist.exchange_stats(self.dist_protocol))
+        st["enabled"] = True
+        return st
 
     @property
     def exe_cache_stats(self) -> dict:
@@ -699,6 +733,74 @@ class FMMSession:
         eng = self._engine
         cache = eng.exe_cache if eng is not None else resolve_cache(self.exe_cache)
         return cache.stats()
+
+    def report(self, *, measure_exchange: bool | None = None,
+               protocols=None, reps: int = 3) -> dict:
+        """One structured flight-recorder dict for this session: per-span
+        timings, metrics counters, memo/cache/launch accounting and — on
+        mesh-backed sessions — per-protocol exchange stats with the
+        `model_drift` ratio (measured wall time / LogGP-predicted time).
+
+        `measure_exchange` controls whether exchanges are actually *run and
+        timed* (defaults to tracing-enabled); when off, the exchange block
+        carries the static byte/round accounting only.  Never raises on
+        mesh-less or engine-less sessions — disabled sub-blocks are marked
+        `{"enabled": False}` (same contract as `exchange_stats`)."""
+        tracer = obs.get_tracer()
+        rep: dict = {
+            "obs": {"enabled": obs.enabled(),
+                    "fences": obs.fences_enabled(),
+                    "events": len(tracer.events) if tracer else 0,
+                    "dropped": tracer.dropped if tracer else 0},
+            "timings": tracer.summary() if tracer else {},
+            "metrics": obs.metrics_snapshot(),
+            "memo": {"hits": self._memo.hits, "misses": self._memo.misses,
+                     "resident_views": len(self._memo._views)},
+            "exe_cache": self.exe_cache_stats,
+            "geometry": {"n": int(self._geo.n),
+                         "nparts": int(self._geo.spec.nparts),
+                         "version": int(self._geo.version),
+                         "bytes_matrix_total":
+                             int(self._geo.bytes_matrix.sum())},
+        }
+
+        # Launch accounting: per compiled fused entry, observed call count
+        # and the HLO-verified entry-computation count (the one-launch pin).
+        eng = self._engine
+        if eng is not None and getattr(eng, "_entries", None):
+            from repro.analysis.hlo_walk import count_entry_launches
+            launches: dict = {}
+            for (kind, x64), (entry, _tabs) in eng._entries.items():
+                launches[kind] = {
+                    "calls": entry.calls,
+                    "entry_computations":
+                        count_entry_launches(entry.hlo_text),
+                    "x64": bool(x64)}
+            launches["fused_dispatches"] = len(eng.launch_log)
+            rep["launches"] = launches
+        else:
+            rep["launches"] = {"enabled": False}
+
+        # Exchange accounting (+ measured-vs-LogGP drift when measuring).
+        if self.mesh is None:
+            rep["exchange"] = {"enabled": False, "protocols": {}}
+        else:
+            do_measure = (obs.enabled() if measure_exchange is None
+                          else bool(measure_exchange))
+            names = tuple(protocols) if protocols else ("bulk", "grain",
+                                                        "hsdx")
+            per_proto = {}
+            for name in names:
+                if do_measure:
+                    per_proto[name] = self.dist.measure_exchange(name,
+                                                                 reps=reps)
+                else:
+                    per_proto[name] = self.dist.exchange_stats(name)
+            rep["exchange"] = {"enabled": True,
+                               "protocol": self.dist_protocol,
+                               "measured": do_measure,
+                               "protocols": per_proto}
+        return rep
 
     # ------------------------------------------------------------- comm ---
     def comm(self, protocol: str = "hsdx", grain_bytes: int | None = None,
@@ -725,13 +827,22 @@ class FMMSession:
         read-only: it is shared by every SessionResult of this geometry
         version, so in-place mutation would corrupt the cache — copy it to
         post-process."""
-        if self.mesh is not None:
-            phi = self.dist.evaluate(self.dist_protocol)
-        elif self.engine_enabled:
-            phi = self.engine.evaluate()
-        else:
-            phi = execute_geometry(self._geo, use_kernels=self.use_kernels,
-                                   asarray=self._memo)
+        with obs.span("session.evaluate") as sp:
+            if self.mesh is not None:
+                dispatch = "dist"
+                phi = self.dist.evaluate(self.dist_protocol)
+            elif self.engine_enabled:
+                dispatch = "engine"
+                phi = self.engine.evaluate()
+            else:
+                dispatch = "reference"
+                phi = execute_geometry(self._geo,
+                                       use_kernels=self.use_kernels,
+                                       asarray=self._memo)
+            obs.counter_add("session.evaluations")
+            if obs.enabled():
+                sp.set({"dispatch": dispatch, "n": int(self._geo.n),
+                        "version": int(self._geo.version)})
         phi.setflags(write=False)
         self._phi, self._phi_version = phi, self._geo.version
         return phi
@@ -774,6 +885,16 @@ class FMMSession:
         payload (positions, multipoles, shipped LET bodies) onto the cached
         index structure; drift beyond it rebuilds the partition and exactly
         the LETs / receiver plans that touch it."""
+        with obs.span("session.step") as sp:
+            report = self._step_impl(new_x, new_q)
+            obs.counter_add("session.steps")
+            if obs.enabled():
+                sp.set({"cache_hit": report.cache_hit,
+                        "rebuilt": len(report.rebuilt),
+                        "refreshed": len(report.refreshed)})
+        return report
+
+    def _step_impl(self, new_x, new_q=None) -> StepReport:
         geo = self._geo
         spec = geo.spec
         P = spec.nparts

@@ -37,6 +37,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.dist import programs as prog_mod
 from repro.core.dist.layout import build_wire_layout, build_wire_tables
 from repro.core.fmm import _p2p_vals
@@ -282,8 +283,9 @@ class ShardedEngine:
     # ----------------------------------------------------------- programs --
     def program(self, protocol: str) -> prog_mod.ExchangeProgram:
         if protocol not in self._programs:
-            self._programs[protocol] = prog_mod.build_exchange_program(
-                self.layout, protocol, grain_bytes=self.grain_bytes)
+            with obs.span("dist.build_program"):
+                self._programs[protocol] = prog_mod.build_exchange_program(
+                    self.layout, protocol, grain_bytes=self.grain_bytes)
         return self._programs[protocol]
 
     def exchange_stats(self, protocol: str) -> dict:
@@ -386,9 +388,15 @@ class ShardedEngine:
         """Full potential in original body order (float64, host) — the
         rank-sharded phases run under `shard_map`, phi accumulates in host
         f64 exactly like `DeviceEngine.evaluate`'s non-x64 path."""
-        fn = self._shard_fn(protocol)
-        outs = fn(self._x_pad, self._q_pad, self._part_tabs, self._rank_tabs,
-                  prog_mod.round_tables(self.program(protocol)))
+        with obs.span("dist.evaluate") as sp:
+            fn = self._shard_fn(protocol)
+            outs = sp.fence(fn(self._x_pad, self._q_pad, self._part_tabs,
+                               self._rank_tabs,
+                               prog_mod.round_tables(
+                                   self.program(protocol))))
+            obs.counter_add("dist.evaluations")
+            if obs.enabled():
+                sp.set({"protocol": protocol, "n_ranks": self.n_ranks})
         up = self.up
         P, Nmax = up.n_parts, up.n_bodies_max
         phi_flat = np.zeros(P * Nmax)
@@ -421,16 +429,14 @@ class ShardedEngine:
                                                 self.up.n_bodies_max)
 
     # ---------------------------------------------------------- benchmark --
-    def exchange_fn(self, protocol: str):
-        """A jitted shard_map program running ONLY pack + exchange (no FMM
-        phases) — what `benchmarks/fig8_exchange.py` times against the LogGP
-        prediction.  Returns `fn()` -> (D,) per-rank pool checksums (the
-        reduction defeats dead-code elimination)."""
-        if protocol in self._ex_fns:
-            return self._ex_fns[protocol]
+    def _build_exchange_fn(self, program: prog_mod.ExchangeProgram):
+        """Jitted shard_map program running ONLY pack + exchange (no FMM
+        phases) for an arbitrary `ExchangeProgram` — including single-round
+        sub-programs, which is how `measure_exchange(per_round=True)` times
+        each collective round in isolation.  Returns `fn()` -> (D,) per-rank
+        pool checksums (the reduction defeats dead-code elimination)."""
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as PS
-        program = self.program(protocol)
         axis = self.axis
 
         def rank_ex(rt, rtabs):
@@ -443,5 +449,61 @@ class ShardedEngine:
             out_specs=PS(axis), check_rep=False))
         tabs = {"pool_template": self.wire.pool_template}
         rtabs = prog_mod.round_tables(program)
-        self._ex_fns[protocol] = lambda: fn(tabs, rtabs)
+        return lambda: fn(tabs, rtabs)
+
+    def exchange_fn(self, protocol: str):
+        """Memoized `_build_exchange_fn` for one protocol's full program —
+        what `benchmarks/fig8_exchange.py` times against the LogGP
+        prediction."""
+        if protocol not in self._ex_fns:
+            self._ex_fns[protocol] = self._build_exchange_fn(
+                self.program(protocol))
         return self._ex_fns[protocol]
+
+    def measure_exchange(self, protocol: str, *, reps: int = 3,
+                         per_round: bool = False) -> dict:
+        """Run one protocol's exchange-only program and compare measured
+        wall time against its LogGP prediction — the `model_drift` probe
+        (ISSUE 8): drift = measured_s / loggp_s, so 1.0 means the analytic
+        model still predicts the wire.
+
+        Returns the program's static `stats()` plus measured_s / loggp_s /
+        model_drift / reps and a per-round breakdown (kind + wire bytes,
+        with measured_s per round when `per_round=True` — each round is
+        compiled as its own single-round sub-program)."""
+        import dataclasses as _dc
+        import time as _time
+        p = self.program(protocol)
+        fn = self.exchange_fn(protocol)
+        jax.block_until_ready(fn())          # warm: compile outside timing
+        t0 = _time.perf_counter()
+        for _ in range(reps):
+            out = fn()
+        jax.block_until_ready(out)
+        measured = (_time.perf_counter() - t0) / reps
+        loggp = prog_mod.predicted_time(p)
+        drift = measured / loggp if loggp > 0 else float("inf")
+        rounds = [{"kind": r.kind, "wire_bytes": 4 * r.wire_words}
+                  for r in p.rounds]
+        if per_round:
+            for rnd, rec in zip(p.rounds, rounds):
+                sub = _dc.replace(p, rounds=(rnd,))
+                sub_fn = self._build_exchange_fn(sub)
+                jax.block_until_ready(sub_fn())
+                rt0 = _time.perf_counter()
+                for _ in range(reps):
+                    rout = sub_fn()
+                jax.block_until_ready(rout)
+                rec["measured_s"] = (_time.perf_counter() - rt0) / reps
+        st = p.stats()
+        st.update(measured_s=measured, loggp_s=loggp, model_drift=drift,
+                  reps=reps, rounds=rounds,
+                  rank_bytes=self.layout.rank_bytes.tolist())
+        obs.observe(f"dist.model_drift.{protocol}", drift)
+        if obs.enabled():
+            obs.event("dist.exchange_probe",
+                      {"protocol": protocol, "measured_s": measured,
+                       "loggp_s": loggp, "model_drift": drift,
+                       "moved_bytes": int(p.moved_bytes.sum()),
+                       "n_rounds": p.n_rounds})
+        return st

@@ -256,6 +256,13 @@ def build_exchange_program(layout: WireLayout, protocol: str, *,
         raise RuntimeError(
             f"{protocol}: delivered {delivered.tolist()} != bytes matrix "
             f"{offdiag.tolist()}")
+    from repro import obs
+    if obs.enabled():
+        obs.event("dist.program_built",
+                  {"protocol": protocol, "n_rounds": len(rounds),
+                   "moved_bytes": int(moved.sum()),
+                   "delivered_bytes": int(delivered.sum()),
+                   "padded_wire_bytes": int(padded)})
     return ExchangeProgram(
         protocol=protocol, layout=layout, sched=sched, rounds=rounds,
         moved_bytes=moved, delivered_bytes=delivered,

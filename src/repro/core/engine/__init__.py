@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.engine import fused as _fused_mod
 from repro.core.engine.exe_cache import (ExecutableCache, GLOBAL_CACHE,
                                          resolve_cache)
@@ -187,9 +188,11 @@ class DeviceEngine:
                     "buffers are deleted after the launch, which would "
                     "poison the memo (engine.fused donation contract); pass "
                     "a fresh upload or a previous fused output instead")
+            obs.counter_add("engine.donate.reuse")
             return arr if dtype is None else jnp.asarray(arr, dtype)
         # jnp.array (copy), never asarray: CPU zero-copy uploads alias the
         # caller's host buffer, and XLA would scribble over it on donation
+        obs.counter_add("engine.donate.upload")
         return jnp.array(np.asarray(arr), dtype=dtype)
 
     def _payload_device(self):
@@ -257,9 +260,11 @@ class DeviceEngine:
         """One donated launch: payload in, potential (and multipoles) out.
         The threaded-through payload outputs rebind the engine's handles —
         XLA aliases them onto the donated inputs' storage."""
-        entry, tabs = self._fused_entry("evaluate")
-        xd, qd = self._payload_device()
-        phi, M, x_out, q_out = entry(xd, qd, tabs)
+        with obs.span("engine.fused_evaluate") as sp:
+            entry, tabs = self._fused_entry("evaluate")
+            xd, qd = self._payload_device()
+            phi, M, x_out, q_out = sp.fence(entry(xd, qd, tabs))
+            obs.counter_add("engine.fused_launches")
         self._x_pad, self._q_pad = x_out, q_out
         self._M = M
         self.launch_log.append(("evaluate", entry.key))
@@ -281,33 +286,39 @@ class DeviceEngine:
         (aliased), and the restacked envelope is staged as the pending
         payload without ever touching the host."""
         if self.fused:
-            entry, tabs = self._fused_entry("step")
-            nd = self._donatable(new_x, jnp.float32)
-            xd = self._donatable(self._x_pad, jnp.float32)
-            drift, changed, x_new, x_out = entry(nd, xd, tabs)
-            self._x_pad = x_out
-            self._pending_x_pad = x_new
-            self.launch_log.append(("step", entry.key))
-            return (np.asarray(drift, np.float64), np.asarray(changed, bool))
-        t = self.tables
-        aa = self._aa
-        if self._x_ref_pad is None:
-            self._x_ref_pad = stack_reference_bodies(self.geo, t)
-        xd = aa(new_x, jnp.float32)
-        x_pad = restack_payload(xd, aa(t.orig_idx), aa(t.flat_idx),
-                                t.n_parts, t.n_bodies_max)
-        drift, changed = partition_drift(x_pad, aa(self._x_ref_pad),
-                                         aa(self._x_pad, jnp.float32))
-        self._pending_x_pad = x_pad
-        return (np.asarray(drift, np.float64),
-                np.asarray(changed, bool))
+            with obs.span("engine.step_drift"):
+                entry, tabs = self._fused_entry("step")
+                nd = self._donatable(new_x, jnp.float32)
+                xd = self._donatable(self._x_pad, jnp.float32)
+                drift, changed, x_new, x_out = entry(nd, xd, tabs)
+                self._x_pad = x_out
+                self._pending_x_pad = x_new
+                self.launch_log.append(("step", entry.key))
+                obs.counter_add("engine.fused_launches")
+                return (np.asarray(drift, np.float64),
+                        np.asarray(changed, bool))
+        with obs.span("engine.step_drift"):
+            t = self.tables
+            aa = self._aa
+            if self._x_ref_pad is None:
+                self._x_ref_pad = stack_reference_bodies(self.geo, t)
+            xd = aa(new_x, jnp.float32)
+            x_pad = restack_payload(xd, aa(t.orig_idx), aa(t.flat_idx),
+                                    t.n_parts, t.n_bodies_max)
+            drift, changed = partition_drift(x_pad, aa(self._x_ref_pad),
+                                             aa(self._x_pad, jnp.float32))
+            self._pending_x_pad = x_pad
+            return (np.asarray(drift, np.float64),
+                    np.asarray(changed, bool))
 
     # ------------------------------------------------------------ passes --
     def upward(self):
         """Device multipoles (P, n_cells_max, nk); cached per payload."""
         if self._M is None:
-            self._M = batched_upward(self._ops, self._x_pad, self._q_pad,
-                                     self.tables.up, asarray=self.memo)
+            with obs.span("engine.upward") as sp:
+                self._M = sp.fence(
+                    batched_upward(self._ops, self._x_pad, self._q_pad,
+                                   self.tables.up, asarray=self.memo))
         return self._M
 
     def _phase_values(self):
@@ -320,24 +331,29 @@ class DeviceEngine:
         q = aa(self._q_pad, jnp.float32)
         ut = t.up.tables
 
-        l2p_vals = far_tail_kernel(
-            self._ops, M, x,
-            {k: aa(v) for k, v in t.m2l.items()},
-            aa(ut["down_ids"]), aa(ut["down_parents"]), aa(ut["down_mask"]),
-            aa(ut["down_d"]), aa(ut["leaves"]), aa(ut["leaf_mask"]),
-            aa(ut["leaf_centers"]), aa(ut["leaf_idx"]))
+        with obs.span("engine.far_field") as sp:
+            l2p_vals = sp.fence(far_tail_kernel(
+                self._ops, M, x,
+                {k: aa(v) for k, v in t.m2l.items()},
+                aa(ut["down_ids"]), aa(ut["down_parents"]),
+                aa(ut["down_mask"]), aa(ut["down_d"]), aa(ut["leaves"]),
+                aa(ut["leaf_mask"]), aa(ut["leaf_centers"]),
+                aa(ut["leaf_idx"])))
         yield t.l2p_t_idx, ut["leaf_valid"], l2p_vals
 
         for bucket in t.p2p_buckets:
-            vals = p2p_bucket_vals(x, q, bucket, use_kernels=self.use_kernels,
-                                   interpret=self.interpret, asarray=self.memo,
-                                   to_host=False)
+            with obs.span("engine.p2p_bucket") as sp:
+                vals = sp.fence(p2p_bucket_vals(
+                    x, q, bucket, use_kernels=self.use_kernels,
+                    interpret=self.interpret, asarray=self.memo,
+                    to_host=False))
             yield bucket["t_idx"], bucket["t_valid"], vals
 
         if t.m2p["b"].shape[0]:
-            vals = m2p_vals_kernel(self._ops, M, x, aa(t.m2p["b"]),
-                                   aa(t.m2p["centers"]), aa(t.m2p["mask"]),
-                                   aa(t.m2p["t_idx"]))
+            with obs.span("engine.m2p") as sp:
+                vals = sp.fence(m2p_vals_kernel(
+                    self._ops, M, x, aa(t.m2p["b"]), aa(t.m2p["centers"]),
+                    aa(t.m2p["mask"]), aa(t.m2p["t_idx"])))
             yield t.m2p["t_idx"], t.m2p["t_valid"], vals
 
     def evaluate_device(self) -> jnp.ndarray:

@@ -31,6 +31,8 @@ from __future__ import annotations
 
 from collections import OrderedDict
 
+from repro import obs
+
 __all__ = ["CompiledEntry", "ExecutableCache", "GLOBAL_CACHE",
            "resolve_cache", "DEFAULT_MAXSIZE"]
 
@@ -87,14 +89,22 @@ class ExecutableCache:
         entry = self._entries.get(key)
         if entry is not None:
             self.hits += 1
+            obs.counter_add("exe_cache.hits")
             self._entries.move_to_end(key)
             return entry
         self.misses += 1
-        entry = CompiledEntry(key, compile_fn())
+        obs.counter_add("exe_cache.misses")
+        # the compile-vs-execute split: every XLA compilation this process
+        # ever pays appears as one of these spans; entry launches (`calls`)
+        # are the execute side
+        with obs.span("exe_cache.compile",
+                      {"key": str(key)} if obs.enabled() else None):
+            entry = CompiledEntry(key, compile_fn())
         self._entries[key] = entry
         while len(self._entries) > self.maxsize:
             self._entries.popitem(last=False)
             self.evictions += 1
+            obs.counter_add("exe_cache.evictions")
         return entry
 
     def stats(self) -> dict:

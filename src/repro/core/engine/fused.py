@@ -118,6 +118,13 @@ def build_fused_evaluate(ops, tables, *, use_kernels: bool,
     donated payload pair is threaded to the outputs for aliasing, and the
     device multipoles `M` come back so the engine can serve `upward()`
     without a second launch."""
+    from repro import obs
+    if obs.enabled():
+        obs.event("engine.fused_build",
+                  {"kind": "evaluate", "n": tables.n,
+                   "n_parts": tables.n_parts,
+                   "n_buckets": len(tables.p2p_buckets),
+                   "use_kernels": bool(use_kernels)})
     P, Cmax = tables.n_parts, tables.n_cells_max
     Nmax, n = tables.n_bodies_max, tables.n
     n_buckets = len(tables.p2p_buckets)
@@ -186,6 +193,11 @@ def build_fused_step(tables):
     `x_new` is the staged next payload and the previous `x_pad` is threaded
     back out so the engine keeps a live handle (donated -> aliased).
     `new_x` is NOT donated: it has no same-shape output to alias onto."""
+    from repro import obs
+    if obs.enabled():
+        obs.event("engine.fused_build",
+                  {"kind": "step", "n": tables.n,
+                   "n_parts": tables.n_parts})
     P, Nmax = tables.n_parts, tables.n_bodies_max
 
     def fused(new_x, x_pad, tab):

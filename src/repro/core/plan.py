@@ -75,6 +75,16 @@ independent axis of the paper plus the hardware floor:
      fused/per-phase knob (`fused=`, `exe_cache_stats`), and multi-device
      dispatch (`mesh=`, `dist_protocol=`, `exchange_stats`).
 
+Threaded through all six tiers — not a tier of its own — is the
+observability layer (`repro.obs`): nested wall-time spans around plan
+construction, engine phases and exchanges (with opt-in
+`block_until_ready` fences for device timing), a process-wide metrics
+registry absorbing the scattered counters (memo hits, cache misses,
+autotune decisions, donation events), and mesh-session probes comparing
+measured exchange time against the LogGP prediction (`model_drift`).
+Disabled — the default — it costs one global load per call site;
+`FMMSession.report()` and `Tracer.to_chrome_trace()` are the read side.
+
 A plan is built once and executed many times — time-stepped N-body where
 geometry changes slowly, or protocol sweeps over the same partitioning —
 which is what makes the host side disappear from the hot path.  All plan

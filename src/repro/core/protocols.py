@@ -159,15 +159,23 @@ def _hsdx(B: np.ndarray, boxes: np.ndarray) -> Schedule:
 
 def make_schedule(name: str, B: np.ndarray, boxes: np.ndarray | None = None) -> Schedule:
     if name == "alltoallv":
-        return _alltoallv(B)
-    if name == "nbx":
-        return _nbx(B)
-    if name == "pairwise":
-        return _pairwise(B)
-    if name == "hsdx":
+        sched = _alltoallv(B)
+    elif name == "nbx":
+        sched = _nbx(B)
+    elif name == "pairwise":
+        sched = _pairwise(B)
+    elif name == "hsdx":
         assert boxes is not None, "hsdx needs partition boxes (Lemma 1 adjacency)"
-        return _hsdx(B, boxes)
-    raise ValueError(f"unknown protocol {name!r}")
+        sched = _hsdx(B, boxes)
+    else:
+        raise ValueError(f"unknown protocol {name!r}")
+    from repro import obs
+    if obs.enabled():
+        obs.event("protocols.make_schedule",
+                  {"protocol": name, "nparts": int(sched.nparts),
+                   "n_stages": len(sched.stages),
+                   "total_bytes": int(schedule_edge_bytes(sched).sum())})
+    return sched
 
 
 def simulate_delivery(sched: Schedule) -> dict[tuple[int, int], int]:

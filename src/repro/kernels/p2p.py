@@ -208,12 +208,16 @@ def best_block_t(S: int, n_pairs: int, T: int = TB, *,
     if persist:
         _load_persisted(jax.default_backend())
         persist = not _PERSIST_BROKEN    # load may have just broken it
+    from repro import obs
     hit = _BLOCK_CACHE.get(key)
     if hit is not None:
+        obs.counter_add("p2p.autotune.cache_hits")
         return hit
     if interpret or sample is None:
+        mode = "heuristic"
         choice = _heuristic_block_t(S, T)
     else:
+        mode = "measured"
         import statistics
         import time
         q, xs, xt = sample
@@ -232,4 +236,9 @@ def best_block_t(S: int, n_pairs: int, T: int = TB, *,
         if persist:
             _save_persisted(jax.default_backend(), key, choice)
     _BLOCK_CACHE[key] = choice
+    obs.counter_add("p2p.autotune.decisions")
+    if obs.enabled():
+        obs.event("p2p.autotune",
+                  {"S": int(S), "n_pairs": int(n_pairs), "T": int(T),
+                   "block_t": int(choice), "mode": mode})
     return choice

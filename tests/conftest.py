@@ -1,0 +1,19 @@
+"""Shared fixtures: observability isolation.
+
+The obs subsystem is process-global (module-level tracer + GLOBAL_METRICS),
+so counter assertions in one test would see another test's increments
+without this autouse reset — tracing is forced off and all recorded
+spans/metrics dropped around every test.
+"""
+import pytest
+
+from repro import obs
+
+
+@pytest.fixture(autouse=True)
+def _obs_isolation():
+    obs.configure(enabled=False)
+    obs.reset()
+    yield
+    obs.configure(enabled=False)
+    obs.reset()
