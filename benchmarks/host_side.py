@@ -94,8 +94,9 @@ def _step_revalidation_rows(n, nparts, theta, ncrit):
 def _fused_engine_rows(n, nparts, theta, ncrit):
     """Fused megakernel + AOT executable-cache rows (repro.core.engine.fused):
     cold lower+compile vs warm one-launch evaluate, fused vs per-phase warm
-    latency, warm within-slack fused step, and the second geometry of the
-    SAME shape class — which must be served from the executable cache with
+    latency, warm within-slack fused step, the streaming-near-field warm
+    evaluate (unified stream table vs per-bucket gathers inside the same
+    donated launch), and the second geometry of the SAME shape class — which must be served from the executable cache with
     zero XLA compilations (asserted via the miss counter)."""
     from repro.core.api import FMMSession, PartitionSpec, plan_geometry
     from repro.core.engine import ExecutableCache
@@ -120,6 +121,13 @@ def _fused_engine_rows(n, nparts, theta, ncrit):
     step_x = x + rng.uniform(-eps, eps, x.shape)
     us_step = _time(lambda: sess.step(step_x))       # ONE launch, within slack
 
+    # streaming near field inside the fused composite (ISSUE 9 before/after:
+    # unified stream table vs per-bucket gathers, same one-launch contract)
+    ssess = FMMSession(plan_geometry(x, q, spec), engine=True, fused=True,
+                       use_kernels=False, p2p_stream=True, exe_cache=cache)
+    ssess.evaluate()                        # compile the streaming entry
+    us_stream = _time(ssess.evaluate)
+
     misses0 = cache.misses
     sess2 = FMMSession(plan_geometry(x.copy(), q.copy(), spec), engine=True,
                        fused=True, use_kernels=False, exe_cache=cache)
@@ -132,6 +140,8 @@ def _fused_engine_rows(n, nparts, theta, ncrit):
          "lower+compile+launch"),
         (f"fused_evaluate_warm_n{n}_p{nparts}", us_warm,
          f"cold/warm={us_cold / max(us_warm, 1e-9):.1f}x"),
+        (f"fused_evaluate_warm_stream_n{n}_p{nparts}", us_stream,
+         f"gathered/stream={us_warm / max(us_stream, 1e-9):.2f}x"),
         (f"perphase_evaluate_warm_n{n}_p{nparts}", us_pp,
          f"perphase/fused={us_pp / max(us_warm, 1e-9):.2f}x"),
         (f"fused_step_warm_n{n}_p{nparts}", us_step, ""),

@@ -5,12 +5,18 @@ validates numerics + BlockSpec indexing).  derived = max |err| vs oracle.
 Also sweeps the engine execution tier: per-width-class bucketed P2P (the
 engine's Pallas route vs the jnp reference route, reporting per-bucket
 speedup — >1x only on real device backends; interpret mode runs the kernel
-as traced Python) and full engine-vs-reference geometry evaluation.
+as traced Python), full engine-vs-reference geometry evaluation, and the
+ISSUE 9 streaming-vs-gathered near-field comparison (unified stream-table
+slab program + in-kernel-gather Pallas kernel vs the per-bucket gathered
+route, with scatter-accumulated max_err between the paths).
 Environment knobs: ENGINE_BENCH_N (bodies, default 1500), ENGINE_BENCH_PARTS
-(default 4)."""
+(default 4).  As a script: ``python benchmarks/kernel_bench.py
+[--stream-only] [--json=PATH|--no-json]`` — rows land in
+benchmarks/BENCH_kernels.json with the common provenance header."""
 from __future__ import annotations
 
 import os
+import sys
 import time
 
 import jax
@@ -59,8 +65,81 @@ def run():
     y2, _ = ref.wkv_ref(r, k, v, w, u, s0)
     rows.append(("kernel_rwkv6_wkv", us, f"max_err={float(jnp.max(jnp.abs(y1-y2))):.2e}"))
     rows.extend(_bucketed_p2p_rows(rng))
+    rows.extend(_stream_rows())
     rows.extend(_engine_rows())
     return rows
+
+
+def _stream_rows():
+    """Streaming vs gathered near field on one geometry — the ISSUE 9
+    before/after.  Three routes over the SAME leaf-pair work: (a) the
+    gathered per-width-class bucket path (one XLA gather + one launch per
+    width class), (b) the unified stream table as one XLA slab program
+    (`p2p_stream_gathered`, the use_kernels=False streaming route), (c) the
+    streaming Pallas kernel with in-kernel slab DMA (interpret-mode
+    emulation on CPU — the honest slower row; the kernel wins only on real
+    device backends).  max_err compares the scatter-accumulated per-body
+    sums, the quantity the engine actually consumes."""
+    from repro.core.api import PartitionSpec, plan_geometry
+    from repro.core.distributions import make_distribution
+    from repro.core.engine import DeviceEngine, build_p2p_stream_tables
+    from repro.core.engine.p2p import (p2p_bucket_vals, p2p_stream_gathered,
+                                       stream_payload)
+    from repro.kernels.p2p_stream import p2p_stream
+    n = int(os.environ.get("ENGINE_BENCH_N", "1500"))
+    nparts = int(os.environ.get("ENGINE_BENCH_PARTS", "4"))
+    x = make_distribution("sphere", n, seed=9)      # boundary distribution
+    q = np.random.default_rng(10).uniform(-1, 1, n)
+    geo = plan_geometry(x, q, PartitionSpec(nparts=nparts, ncrit=48))
+    eng = DeviceEngine(geo, use_kernels=False, fused=False, p2p_stream=False)
+    buckets = eng.tables.p2p_buckets
+    stream = build_p2p_stream_tables(buckets, 128)
+    if stream is None:
+        return [(f"p2p_stream_vs_gathered_n{n}", 0.0,
+                 "geometry cannot stream (non-contiguous rows)")]
+    x_dev = jnp.asarray(eng._x_pad)
+    q_dev = jnp.asarray(eng._q_pad)
+    payload = stream_payload(x_dev, q_dev, stream["pad"])
+    meta = jnp.asarray(stream["meta"])
+    bt, smax = stream["block_t"], stream["smax"]
+
+    def gathered():
+        return [p2p_bucket_vals(x_dev, q_dev, b, use_kernels=False,
+                                to_host=False) for b in buckets]
+
+    xla_stream = jax.jit(lambda m, p: p2p_stream_gathered(
+        m, p, block_t=bt, smax=smax))
+    us_g = _time(lambda: gathered()[-1])
+    us_x = _time(lambda: xla_stream(meta, payload))
+    us_k = _time(lambda: p2p_stream(meta, payload, block_t=bt, smax=smax,
+                                    n_buffers=2, interpret=ops.INTERPRET))
+
+    # scatter-accumulate both paths to per-body sums for an honest max_err
+    flat = payload.shape[1]
+    phi_g = np.zeros(flat)
+    for b, vals in zip(buckets, gathered()):
+        v = np.asarray(vals)
+        live = np.asarray(b["mask"]) != 0.0
+        for r in np.nonzero(live)[0]:
+            sel = b["t_valid"][r]
+            np.add.at(phi_g, b["t_idx"][r][sel], v[r][sel])
+    phi_s = np.zeros(flat)
+    sv = np.asarray(p2p_stream_gathered(meta, payload, block_t=bt, smax=smax))
+    ok = stream["out_valid"]
+    np.add.at(phi_s, stream["out_idx"][ok], sv[ok])
+    err = float(np.max(np.abs(phi_g - phi_s)))
+
+    kernel_mode = "interpret" if ops.INTERPRET else "compiled"
+    return [
+        (f"p2p_gathered_buckets_n{n}_p{nparts}", us_g,
+         f"width_classes={len(buckets)}"),
+        (f"p2p_stream_xla_n{n}_p{nparts}", us_x,
+         f"tiles={stream['n_live_tiles']}/{stream['n_tiles']} "
+         f"speedup_vs_gathered={us_g / max(us_x, 1e-9):.2f}x "
+         f"max_err={err:.2e}"),
+        (f"p2p_stream_kernel_{kernel_mode}_n{n}_p{nparts}", us_k,
+         f"n_buffers=2 speedup_vs_gathered={us_g / max(us_k, 1e-9):.2f}x"),
+    ]
 
 
 def _bucketed_p2p_rows(rng):
@@ -113,3 +192,28 @@ def _engine_rows():
     return [(f"engine_vs_reference_n{n}_p{nparts}", us_eng,
              f"ref_us={us_ref:.1f} speedup={us_ref / us_eng:.2f}x "
              f"max_err={err:.2e}")]
+
+
+if __name__ == "__main__":
+    try:
+        from benchmarks.host_side import write_bench_json
+    except ImportError:            # run as `python benchmarks/kernel_bench.py`
+        from host_side import write_bench_json
+    stream_only = False
+    json_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "BENCH_kernels.json")
+    for a in sys.argv[1:]:
+        if a == "--stream-only":   # CI interpret smoke: just the ISSUE 9
+            stream_only = True     # streaming-vs-gathered comparison
+        elif a.startswith("--json="):
+            json_path = a.split("=", 1)[1]
+        elif a == "--no-json":
+            json_path = None
+    out = _stream_rows() if stream_only else run()
+    for name, us, derived in out:
+        print(f"{name},{us:.1f},{derived}")
+    if json_path:
+        where = write_bench_json(out, json_path,
+                                 meta={"module": "kernel_bench",
+                                       "stream_only": stream_only})
+        print(f"# wrote {where}", file=sys.stderr)

@@ -1,10 +1,16 @@
 """Roofline terms per (arch x shape) from the dry-run artifacts (if present).
 derived = the three terms + dominant bottleneck.  Run the dry-run first:
     PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all
+
+As a script: ``python benchmarks/roofline_table.py [--json=PATH|--no-json]``
+— rows land in benchmarks/BENCH_roofline.json with the common provenance
+header (host_side.write_bench_json), so the roofline trajectory is tracked
+across PRs alongside the measured rows.
 """
 from __future__ import annotations
 
 import os
+import sys
 
 from repro.analysis.roofline import load_artifacts, roofline_from_artifact
 
@@ -28,3 +34,25 @@ def run():
                      f"dominant={r['dominant']};"
                      f"frac={r['roofline_fraction']:.2f}"))
     return rows or [("roofline_table", 0.0, "no artifacts found")]
+
+
+if __name__ == "__main__":
+    try:
+        from benchmarks.host_side import write_bench_json
+    except ImportError:          # run as `python benchmarks/roofline_table.py`
+        from host_side import write_bench_json
+    json_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "BENCH_roofline.json")
+    for a in sys.argv[1:]:
+        if a.startswith("--json="):
+            json_path = a.split("=", 1)[1]
+        elif a == "--no-json":
+            json_path = None
+    out = run()
+    for name, us, derived in out:
+        print(f"{name},{us:.1f},{derived}")
+    if json_path:
+        where = write_bench_json(out, json_path,
+                                 meta={"module": "roofline_table",
+                                       "artifacts_dir": ART})
+        print(f"# wrote {where}", file=sys.stderr)

@@ -37,6 +37,19 @@ backend already initialized with fewer devices).  Then::
 three deliver bitwise-identical potentials to the single-device engine.
 `main()` below runs the sweep when multiple devices are visible.
 
+The streaming near-field knob
+-----------------------------
+`FMMSession(..., p2p_stream=True)` evaluates the leaf-leaf direct sum
+through the unified stream table (`kernels/p2p_stream.py`): every P2P
+width class concatenates into one tile grid whose source/target slabs are
+gathered *inside* the kernel via double-buffered VMEM DMA, instead of one
+XLA gather + launch per bucket.  The default (`p2p_stream=None`) turns it
+on exactly when the backend is a TPU; on CPU the same table runs as one
+XLA slab program when forced on (`use_kernels=False`), and geometries
+whose bucket rows are not contiguous runs fall back to the gathered path
+automatically.  See the "Streaming vs gathered P2P" paragraphs in
+`core/plan.py` and ROADMAP.md for the selection and VMEM budget math.
+
 The session flight recorder
 ---------------------------
 Every tier is instrumented through `repro.obs`; turn it on before the

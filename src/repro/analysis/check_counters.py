@@ -10,9 +10,12 @@ rest on (ISSUE 8 regression gate):
      (`hlo_walk.count_entry_launches` over the compiled HLO);
   2. a second same-shape-class geometry triggers ZERO new XLA compilations
      (the executable-cache contract);
-  3. every dist protocol's exchange program delivers exactly the
+  3. the STREAMING near-field fused path (ISSUE 9) keeps both contracts:
+     one entry launch with the kernel variant recorded in the executable
+     key, and zero recompiles on a second same-shape-class geometry;
+  4. every dist protocol's exchange program delivers exactly the
      rank-aggregated off-diagonal `GeometryPlan.bytes_matrix`;
-  4. each protocol's `model_drift` (measured / LogGP exchange time) is
+  5. each protocol's `model_drift` (measured / LogGP exchange time) is
      finite and positive — the probe itself works.
 
 Exits nonzero on any violation, printing each check; writes the full
@@ -78,6 +81,29 @@ def main() -> int:
     check(cache.misses == misses0,
           "second same-shape-class geometry -> 0 new XLA compilations "
           f"(misses {misses0} -> {cache.misses})")
+
+    # --- streaming near-field invariants (ISSUE 9 gate) --------------------
+    scache = ExecutableCache()
+    s1 = FMMSession(plan_geometry(x, q, spec), engine=True, fused=True,
+                    use_kernels=False, p2p_stream=True, exe_cache=scache)
+    s1.evaluate()
+    s1.evaluate()
+    (sentry, _stabs) = s1.engine._entries[("evaluate",
+                                           bool(jax.config.jax_enable_x64))]
+    check(count_entry_launches(sentry.hlo_text) == 1,
+          "warm fused STREAMING evaluate compiles to exactly 1 entry "
+          "computation")
+    check(sentry.key[-1] == "stream",
+          "streaming executable key records the kernel variant "
+          f"(key[-1]={sentry.key[-1]!r})")
+    smisses0 = scache.misses
+    s2 = FMMSession(plan_geometry(x.copy(), q.copy(), spec), engine=True,
+                    fused=True, use_kernels=False, p2p_stream=True,
+                    exe_cache=scache)
+    s2.evaluate()
+    check(scache.misses == smisses0,
+          "second same-shape-class geometry on the STREAMING path -> 0 new "
+          f"XLA compilations (misses {smisses0} -> {scache.misses})")
 
     # --- mesh-backed exchange invariants -----------------------------------
     from jax.sharding import Mesh

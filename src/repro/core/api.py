@@ -620,7 +620,8 @@ class FMMSession:
                  use_pallas: bool | None = None,
                  fused: bool | None = None, exe_cache=None,
                  mesh=None, dist_protocol: str = "bulk",
-                 dist_grain_bytes: int | None = None):
+                 dist_grain_bytes: int | None = None,
+                 p2p_stream: bool | None = None):
         from repro.core.engine import (default_engine_enabled,
                                        default_use_kernels)
         if use_pallas is not None:      # deprecated alias, warn-once + honor
@@ -635,6 +636,7 @@ class FMMSession:
         self.use_kernels = (default_use_kernels() if use_kernels is None
                             else bool(use_kernels))
         self.fused = fused               # None -> default_fused_enabled()
+        self.p2p_stream = p2p_stream     # None -> default_p2p_stream()
         self.exe_cache = exe_cache       # None -> process-wide GLOBAL_CACHE
         self.mesh = mesh                 # 1-D mesh -> dist exchange dispatch
         if dist_protocol not in ("bulk", "grain", "hsdx"):
@@ -657,12 +659,14 @@ class FMMSession:
                     fused: bool | None = None, exe_cache=None,
                     mesh=None, dist_protocol: str = "bulk",
                     dist_grain_bytes: int | None = None,
+                    p2p_stream: bool | None = None,
                     **overrides) -> "FMMSession":
         return cls(plan_geometry(x, q, spec, **overrides), engine=engine,
                    use_kernels=use_kernels, use_pallas=use_pallas,
                    fused=fused, exe_cache=exe_cache, mesh=mesh,
                    dist_protocol=dist_protocol,
-                   dist_grain_bytes=dist_grain_bytes)
+                   dist_grain_bytes=dist_grain_bytes,
+                   p2p_stream=p2p_stream)
 
     @property
     def geometry(self) -> GeometryPlan:
@@ -686,7 +690,8 @@ class FMMSession:
                                         use_kernels=self.use_kernels,
                                         asarray=self._memo,
                                         fused=self.fused,
-                                        exe_cache=self.exe_cache)
+                                        exe_cache=self.exe_cache,
+                                        p2p_stream=self.p2p_stream)
         return self._engine
 
     @property

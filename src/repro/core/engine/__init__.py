@@ -47,10 +47,11 @@ from repro.core.engine import fused as _fused_mod
 from repro.core.engine.exe_cache import (ExecutableCache, GLOBAL_CACHE,
                                          resolve_cache)
 from repro.core.engine.m2l import far_tail_kernel, m2p_vals_kernel
-from repro.core.engine.p2p import p2p_bucket_vals
+from repro.core.engine.p2p import p2p_bucket_vals, p2p_stream_vals
 from repro.core.engine.schedules import (BatchedUpwardSchedule, EngineTables,
                                          build_batched_upward,
                                          build_engine_tables,
+                                         build_p2p_stream_tables,
                                          shape_class_digest, stack_bodies,
                                          stack_reference_bodies)
 from repro.core.engine.traversal import (default_traversal_backend,
@@ -64,8 +65,9 @@ from repro.core.multipole import get_operators
 
 __all__ = ["DeviceEngine", "EngineTables", "BatchedUpwardSchedule",
            "build_engine_tables", "build_batched_upward", "batched_upward",
-           "batched_upward_kernel", "stack_bodies", "default_engine_enabled",
-           "default_use_kernels", "default_fused_enabled",
+           "batched_upward_kernel", "build_p2p_stream_tables", "stack_bodies",
+           "default_engine_enabled", "default_use_kernels",
+           "default_fused_enabled", "default_p2p_stream",
            "default_traversal_backend", "resolve_traversal_backend",
            "device_dual_traversal", "partition_drift", "restack_payload",
            "ExecutableCache", "GLOBAL_CACHE", "resolve_cache",
@@ -97,6 +99,15 @@ def default_fused_enabled() -> bool:
     return jax.default_backend() not in ("cpu",)
 
 
+def default_p2p_stream() -> bool:
+    """Streaming-P2P dispatch default: only where the kernel's DMA pipeline
+    is real — the TPU backend.  Elsewhere (CPU tests, GPU) the gathered
+    buckets stay the default; opt in anywhere with `p2p_stream=True` (on CPU
+    that routes through the XLA slab-gather program unless `use_kernels`
+    forces interpret-mode kernel emulation)."""
+    return jax.default_backend() == "tpu"
+
+
 class DeviceEngine:
     """Batched device executor for one `GeometryPlan` (one tree *structure*;
     the numeric payload may rebind across timesteps via `refresh_payload`).
@@ -119,17 +130,29 @@ class DeviceEngine:
     exe_cache : `exe_cache.ExecutableCache` for fused executables; the
         process-wide `GLOBAL_CACHE` when omitted, so geometries of one
         shape class share one compilation across sessions.
+    p2p_stream : run the P2P near field through the unified streaming
+        kernel (`kernels.p2p_stream`: in-kernel slab gathers, double-
+        buffered VMEM DMA, all width classes one grid) instead of one
+        gathered launch per width-class bucket; default
+        `default_p2p_stream()` (on iff TPU).  Falls back to the gathered
+        buckets per geometry when the stream-table contiguity invariant
+        does not hold (`p2p.stream.fallbacks` counter).
     """
 
     def __init__(self, geometry, *, use_kernels: bool | None = None,
                  interpret: bool | None = None, asarray=None,
-                 fused: bool | None = None, exe_cache=None):
+                 fused: bool | None = None, exe_cache=None,
+                 p2p_stream: bool | None = None):
         from repro.core.api import DeviceMemo
         self.geo = geometry
         self.use_kernels = (default_use_kernels() if use_kernels is None
                             else bool(use_kernels))
         self.interpret = interpret
         self.fused = default_fused_enabled() if fused is None else bool(fused)
+        self.p2p_stream = (default_p2p_stream() if p2p_stream is None
+                           else bool(p2p_stream))
+        self._stream = None          # unified stream tables, built lazily
+        self._stream_params = None   # autotuned (block_t, n_buffers)
         self.exe_cache = resolve_cache(exe_cache)
         self._entries: dict = {}     # (kind, x64) -> (CompiledEntry, tabs)
         self.launch_log: list = []   # (kind, key) per fused dispatch
@@ -202,6 +225,66 @@ class DeviceEngine:
         return (self._donatable(self._x_pad, jnp.float32),
                 self._donatable(self._q_pad, jnp.float32))
 
+    # ---------------------------------------------------------- streaming --
+    def _measure_stream(self, block_t: int, n_buffers: int) -> float:
+        """Time one streaming launch at candidate (block_t, n_buffers) —
+        the `best_stream_params` measure closure on real backends (tables
+        are rebuilt per block_t because the tiling depends on it)."""
+        import time
+        stream = build_p2p_stream_tables(self.tables.p2p_buckets, block_t)
+        if stream is None:
+            return float("inf")
+        aa = self._aa
+        fn = lambda: p2p_stream_vals(
+            aa(self._x_pad, jnp.float32), aa(self._q_pad, jnp.float32),
+            stream, use_kernels=True, interpret=self.interpret,
+            asarray=self.memo, n_buffers=n_buffers)
+        jax.block_until_ready(fn())          # compile + warm
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        return time.perf_counter() - t0
+
+    def _stream_tables(self):
+        """Resolve the unified stream tables for this geometry (lazily, once):
+        autotune (block_t, n_buffers) for the stream shape class, build the
+        tile table, and VERIFY the contiguous-run invariant — returns None
+        (and flips the engine back to gathered buckets, counted at
+        `p2p.stream.fallbacks`) when the invariant does not hold."""
+        if not self.p2p_stream:
+            return None
+        if self._stream is not None:
+            return self._stream
+        t = self.tables
+        if not t.p2p_buckets:
+            self.p2p_stream = False
+            return None
+        from repro.kernels import ops as kops
+        from repro.kernels.p2p import best_stream_params
+        interp = (kops.INTERPRET if self.interpret is None
+                  else bool(self.interpret))
+        smax = max(b["s_idx"].shape[1] for b in t.p2p_buckets)
+        wt_max = max(b["t_idx"].shape[1] for b in t.p2p_buckets)
+        n_rows = sum(len(b["mask"]) for b in t.p2p_buckets)
+        measure = (self._measure_stream
+                   if self.use_kernels and not interp else None)
+        bt, nb = best_stream_params(smax, n_rows, wt_max,
+                                    interpret=interp, measure=measure)
+        stream = build_p2p_stream_tables(t.p2p_buckets, bt)
+        if stream is None:
+            obs.counter_add("p2p.stream.fallbacks")
+            self.p2p_stream = False
+            return None
+        self._stream = stream
+        self._stream_params = (bt, nb)
+        obs.counter_add("p2p.stream.builds")
+        if obs.enabled():
+            obs.event("p2p.stream.tables",
+                      {"n_tiles": stream["n_tiles"],
+                       "n_live_tiles": stream["n_live_tiles"],
+                       "smax": stream["smax"], "block_t": bt,
+                       "n_buffers": nb, "n_buckets": len(t.p2p_buckets)})
+        return stream
+
     def _fused_entry(self, kind: str):
         """Resolve this engine's fused executable + uploaded tables for
         `kind` in ("evaluate", "step"), memoized per (kind, x64): the
@@ -217,13 +300,22 @@ class DeviceEngine:
         aa = self._aa
         if kind == "evaluate":
             donate = (0, 1)          # both payload halves alias outputs
-            flat = _fused_mod.flatten_eval_tables(t)
-            block_ts = _fused_mod.bucket_block_ts(
-                t, use_kernels=self.use_kernels, interpret=self.interpret)
+            stream = self._stream_tables()
+            flat = _fused_mod.flatten_eval_tables(t, stream=stream)
+            if stream is not None:
+                p2p_impl = "stream"
+                nb = self._stream_params[1]
+                block_ts = (stream["smax"], stream["block_t"], nb)
+            else:
+                p2p_impl = "gathered"
+                nb = 2
+                block_ts = _fused_mod.bucket_block_ts(
+                    t, use_kernels=self.use_kernels, interpret=self.interpret)
             fn = _fused_mod.build_fused_evaluate(
                 self._ops, t, use_kernels=self.use_kernels,
                 interpret=self.interpret, block_ts=block_ts,
-                acc_dtype=jnp.float64 if x64 else jnp.float32)
+                acc_dtype=jnp.float64 if x64 else jnp.float32,
+                stream=stream, n_buffers=nb)
             in_sds = (jax.ShapeDtypeStruct((t.n_parts, t.n_bodies_max, 3),
                                            jnp.float32),
                       jax.ShapeDtypeStruct((t.n_parts, t.n_bodies_max),
@@ -236,7 +328,7 @@ class DeviceEngine:
             if self._x_ref_pad is None:
                 self._x_ref_pad = stack_reference_bodies(self.geo, t)
             flat = _fused_mod.flatten_step_tables(t, self._x_ref_pad)
-            block_ts = ()
+            block_ts, p2p_impl = (), "gathered"   # step runs no P2P
             fn = _fused_mod.build_fused_step(t)
             in_sds = (jax.ShapeDtypeStruct((t.n, 3), jnp.float32),
                       jax.ShapeDtypeStruct((t.n_parts, t.n_bodies_max, 3),
@@ -249,7 +341,7 @@ class DeviceEngine:
             kind, shape_class_digest(tabs), n=t.n, n_parts=t.n_parts, p=t.p,
             theta=self.geo.theta, x64=x64, backend=jax.default_backend(),
             use_kernels=self.use_kernels, interpret=self.interpret,
-            block_ts=block_ts)
+            block_ts=block_ts, p2p_impl=p2p_impl)
         entry = self.exe_cache.get_or_compile(
             key, lambda: jax.jit(fn, donate_argnums=donate)
             .lower(*in_sds, tabs).compile())
@@ -265,6 +357,12 @@ class DeviceEngine:
             xd, qd = self._payload_device()
             phi, M, x_out, q_out = sp.fence(entry(xd, qd, tabs))
             obs.counter_add("engine.fused_launches")
+            if self._stream is not None:
+                obs.counter_add("p2p.stream.launches")
+                obs.counter_add("p2p.stream.tiles",
+                                self._stream["n_live_tiles"])
+                obs.counter_add("p2p.stream.dma_tiles",
+                                2 * self._stream["n_live_tiles"])
         self._x_pad, self._q_pad = x_out, q_out
         self._M = M
         self.launch_log.append(("evaluate", entry.key))
@@ -341,13 +439,28 @@ class DeviceEngine:
                 aa(ut["leaf_idx"])))
         yield t.l2p_t_idx, ut["leaf_valid"], l2p_vals
 
-        for bucket in t.p2p_buckets:
-            with obs.span("engine.p2p_bucket") as sp:
-                vals = sp.fence(p2p_bucket_vals(
-                    x, q, bucket, use_kernels=self.use_kernels,
+        stream = self._stream_tables()
+        if stream is not None:
+            with obs.span("engine.p2p_stream") as sp:
+                vals = sp.fence(p2p_stream_vals(
+                    x, q, stream, use_kernels=self.use_kernels,
                     interpret=self.interpret, asarray=self.memo,
-                    to_host=False))
-            yield bucket["t_idx"], bucket["t_valid"], vals
+                    n_buffers=self._stream_params[1]))
+                obs.counter_add("p2p.stream.launches")
+                obs.counter_add("p2p.stream.tiles",
+                                stream["n_live_tiles"])
+                # two slab DMAs (sources + targets) per live tile
+                obs.counter_add("p2p.stream.dma_tiles",
+                                2 * stream["n_live_tiles"])
+            yield stream["out_idx"], stream["out_valid"], vals
+        else:
+            for bucket in t.p2p_buckets:
+                with obs.span("engine.p2p_bucket") as sp:
+                    vals = sp.fence(p2p_bucket_vals(
+                        x, q, bucket, use_kernels=self.use_kernels,
+                        interpret=self.interpret, asarray=self.memo,
+                        to_host=False))
+                yield bucket["t_idx"], bucket["t_valid"], vals
 
         if t.m2p["b"].shape[0]:
             with obs.span("engine.m2p") as sp:

@@ -65,19 +65,28 @@ _UP_KEYS = ("leaves", "leaf_mask", "leaf_centers", "leaf_idx", "leaf_valid",
 
 
 # ------------------------------------------------------------- table views --
-def flatten_eval_tables(tables) -> dict:
+def flatten_eval_tables(tables, stream: dict | None = None) -> dict:
     """Flat {name: host array} of every frozen table the fused evaluate
     reads — one pytree argument, memoized per-leaf by the engine's memo.
     Keys are stable across builds so the pytree structure (and therefore the
-    compiled executable) depends only on the shape class."""
+    compiled executable) depends only on the shape class.
+
+    With `stream` (a `schedules.build_p2p_stream_tables` dict) the per-bucket
+    gather tables are replaced by the unified stream tables — the fused
+    program never touches the bucket indices on that path."""
     flat = {k: tables.up.tables[k] for k in _UP_KEYS}
     for k, v in tables.m2l.items():
         flat[f"m2l_{k}"] = v
     for k, v in tables.m2p.items():
         flat[f"m2p_{k}"] = v
-    for i, b in enumerate(tables.p2p_buckets):
-        for k, v in b.items():
-            flat[f"p2p{i}_{k}"] = v
+    if stream is not None:
+        flat["p2ps_meta"] = stream["meta"]
+        flat["p2ps_out_idx"] = stream["out_idx"]
+        flat["p2ps_out_valid"] = stream["out_valid"]
+    else:
+        for i, b in enumerate(tables.p2p_buckets):
+            for k, v in b.items():
+                flat[f"p2p{i}_{k}"] = v
     flat["l2p_t_idx"] = tables.l2p_t_idx
     flat["orig_idx"] = tables.orig_idx
     flat["flat_idx"] = tables.flat_idx
@@ -111,20 +120,28 @@ def bucket_block_ts(tables, *, use_kernels: bool, interpret: bool | None):
 
 # ----------------------------------------------------------------- builders --
 def build_fused_evaluate(ops, tables, *, use_kernels: bool,
-                         interpret: bool | None, block_ts, acc_dtype):
+                         interpret: bool | None, block_ts, acc_dtype,
+                         stream: dict | None = None, n_buffers: int = 2):
     """Close over the static structure and return the fused evaluate
     `fused(x_pad, q_pad, tab) -> (phi, M, x_pad, q_pad)` — jit it with
     `donate_argnums=(0, 1)`.  `tab` is `flatten_eval_tables` uploaded; the
     donated payload pair is threaded to the outputs for aliasing, and the
     device multipoles `M` come back so the engine can serve `upward()`
-    without a second launch."""
+    without a second launch.
+
+    With `stream` the near field runs as ONE streaming grid over the unified
+    tile table (kernels.p2p_stream with `use_kernels`, the XLA slab-gather
+    program without) instead of one gather + `pallas_call` per width-class
+    bucket — the donated payload is transposed once into the (4, F) slab
+    source in-trace and no per-bucket gathered operands ever hit HBM."""
     from repro import obs
     if obs.enabled():
         obs.event("engine.fused_build",
                   {"kind": "evaluate", "n": tables.n,
                    "n_parts": tables.n_parts,
                    "n_buckets": len(tables.p2p_buckets),
-                   "use_kernels": bool(use_kernels)})
+                   "use_kernels": bool(use_kernels),
+                   "p2p_impl": "stream" if stream is not None else "gathered"})
     P, Cmax = tables.n_parts, tables.n_cells_max
     Nmax, n = tables.n_bodies_max, tables.n
     n_buckets = len(tables.p2p_buckets)
@@ -157,19 +174,36 @@ def build_fused_evaluate(ops, tables, *, use_kernels: bool,
         phi_flat = add(phi_flat, tab["l2p_t_idx"], tab["leaf_valid"],
                        l2p_vals)
 
-        x_flat = x_pad.reshape(-1, 3)
-        q_flat = q_pad.reshape(-1)
-        for i in range(n_buckets):
-            t_idx, s_idx = tab[f"p2p{i}_t_idx"], tab[f"p2p{i}_s_idx"]
-            xt, xs = x_flat[t_idx], x_flat[s_idx]
-            qs = jnp.where(tab[f"p2p{i}_s_valid"], q_flat[s_idx], 0.0)
+        if stream is not None:
+            from repro.core.engine.p2p import (p2p_stream_gathered,
+                                               stream_payload)
+            payload = stream_payload(x_pad, q_pad, stream["pad"])
             if use_kernels:
-                vals = p2p_pallas(qs, xs, xt, interpret=interp,
-                                  block_t=block_ts[i]) \
-                    * tab[f"p2p{i}_mask"][:, None]
+                from repro.kernels.p2p_stream import p2p_stream
+                vals = p2p_stream(tab["p2ps_meta"], payload,
+                                  block_t=stream["block_t"],
+                                  smax=stream["smax"], n_buffers=n_buffers,
+                                  interpret=interp)
             else:
-                vals = _p2p_vals(xt, xs, qs, tab[f"p2p{i}_mask"])
-            phi_flat = add(phi_flat, t_idx, tab[f"p2p{i}_t_valid"], vals)
+                vals = p2p_stream_gathered(tab["p2ps_meta"], payload,
+                                           block_t=stream["block_t"],
+                                           smax=stream["smax"])
+            phi_flat = add(phi_flat, tab["p2ps_out_idx"],
+                           tab["p2ps_out_valid"], vals)
+        else:
+            x_flat = x_pad.reshape(-1, 3)
+            q_flat = q_pad.reshape(-1)
+            for i in range(n_buckets):
+                t_idx, s_idx = tab[f"p2p{i}_t_idx"], tab[f"p2p{i}_s_idx"]
+                xt, xs = x_flat[t_idx], x_flat[s_idx]
+                qs = jnp.where(tab[f"p2p{i}_s_valid"], q_flat[s_idx], 0.0)
+                if use_kernels:
+                    vals = p2p_pallas(qs, xs, xt, interpret=interp,
+                                      block_t=block_ts[i]) \
+                        * tab[f"p2p{i}_mask"][:, None]
+                else:
+                    vals = _p2p_vals(xt, xs, qs, tab[f"p2p{i}_mask"])
+                phi_flat = add(phi_flat, t_idx, tab[f"p2p{i}_t_valid"], vals)
 
         if has_m2p:
             vals = m2p_vals_kernel(ops, M, x_pad, tab["m2p_b"],
@@ -220,10 +254,15 @@ def theta_bucket(theta: float) -> int:
 
 def executable_key(kind: str, digest: str, *, n: int, n_parts: int, p: int,
                    theta: float, x64: bool, backend: str, use_kernels: bool,
-                   interpret, block_ts=()) -> tuple:
+                   interpret, block_ts=(), p2p_impl: str = "gathered") -> tuple:
     """Shape-class key for one fused executable: everything that can change
     the compiled program (digest = per-table dtypes/shapes as uploaded,
-    padded dims, statics) plus the conservative serving knobs."""
+    padded dims, statics) plus the conservative serving knobs.  `p2p_impl`
+    names the near-field kernel variant ("gathered" per-bucket launches vs
+    the unified "stream" grid); on the stream path `block_ts` carries the
+    stream statics `(smax, block_t, n_buffers)` instead of per-bucket
+    blocks — either way the tuple is part of the program text."""
     return (kind, digest, int(n), int(n_parts), int(p), theta_bucket(theta),
             bool(x64), str(backend), bool(use_kernels),
-            None if interpret is None else bool(interpret), tuple(block_ts))
+            None if interpret is None else bool(interpret), tuple(block_ts),
+            str(p2p_impl))

@@ -11,6 +11,14 @@ Pallas kernel (`repro.kernels.ops.p2p_auto`) with a per-(S, n_pairs)
 autotuned target block size; otherwise the jnp reference path
 (`fmm._p2p_vals`) runs — the CPU/interpret fallback the engine defaults to
 off-device.
+
+Streaming alternative (`p2p_stream_vals`): ALL width classes as one grid of
+target tiles over the unified stream table
+(`schedules.build_p2p_stream_tables`), gathering source/target slabs inside
+the kernel (`repro.kernels.p2p_stream`) instead of materializing per-bucket
+gathered operands in HBM.  `use_kernels=False` runs the same slab math as an
+XLA gather program (`p2p_stream_gathered`) — the CPU-fast reference the
+interpret-smoke CI gate exercises.
 """
 from __future__ import annotations
 
@@ -20,7 +28,8 @@ import numpy as np
 
 from repro.core.fmm import _p2p_vals, device_hook
 
-__all__ = ["p2p_bucket_vals"]
+__all__ = ["p2p_bucket_vals", "p2p_stream_vals", "p2p_stream_gathered",
+           "stream_payload"]
 
 
 @jax.jit
@@ -52,3 +61,52 @@ def p2p_bucket_vals(x, q, bucket, use_kernels: bool = False,
     else:
         vals = _p2p_vals(xt, xs, qs, aa(bucket["mask"]))
     return np.asarray(vals) if to_host else vals
+
+
+def stream_payload(x, q, pad: int):
+    """Flatten the (P, Nmax, ...) payload into the streaming kernel's
+    structure-of-arrays slab source: (4, P*Nmax + pad) f32 rows [x; y; z; q],
+    zero-padded so fixed-size slab reads never run past the end.  Traceable —
+    the fused program builds it in-trace from the donated payload (one
+    transpose pass instead of one gather per bucket)."""
+    x_flat = x.reshape(-1, 3).astype(jnp.float32)
+    q_flat = q.reshape(-1).astype(jnp.float32)
+    soa = jnp.concatenate([x_flat.T, q_flat[None, :]], axis=0)
+    return jnp.pad(soa, ((0, 0), (0, pad)))
+
+
+def p2p_stream_gathered(meta, payload, *, block_t: int, smax: int):
+    """XLA reference for the streaming kernel: gather the SAME (4, smax) /
+    (4, block_t) slabs the kernel DMAs, run the SAME tile expression
+    (`stream_tile_phi`).  This is the `use_kernels=False` streaming path —
+    on CPU it beats interpret-mode kernel emulation by orders of magnitude
+    while keeping the unified one-program-all-width-classes structure."""
+    from repro.kernels.p2p_stream import stream_tile_phi
+    lane_s = jnp.arange(smax)
+    lane_t = jnp.arange(block_t)
+    src = payload[:, meta[:, 0:1] + lane_s[None, :]]    # (4, Ti, smax)
+    tgt = payload[:, meta[:, 2:3] + lane_t[None, :]]    # (4, Ti, block_t)
+    phi = jax.vmap(stream_tile_phi, in_axes=(1, 1, 0))(
+        src, tgt, meta[:, 1])
+    return jnp.where((meta[:, 3] > 0)[:, None], phi, 0.0)
+
+
+def p2p_stream_vals(x, q, stream: dict, *, use_kernels: bool,
+                    interpret: bool | None = None, asarray=None,
+                    n_buffers: int = 2):
+    """Evaluate the unified stream table -> (Ti, block_t) f32 device values
+    (mask semantics live in the table's `out_valid`; lanes past a tile's
+    target count are garbage exactly as in the gathered kernel and must be
+    dropped by the caller's accumulation)."""
+    aa = device_hook(asarray)
+    payload = stream_payload(x, q, stream["pad"])
+    meta = aa(stream["meta"])
+    if use_kernels:
+        from repro.kernels import ops as kops
+        from repro.kernels.p2p_stream import p2p_stream
+        interp = kops.INTERPRET if interpret is None else bool(interpret)
+        return p2p_stream(meta, payload, block_t=stream["block_t"],
+                          smax=stream["smax"], n_buffers=n_buffers,
+                          interpret=interp)
+    return p2p_stream_gathered(meta, payload, block_t=stream["block_t"],
+                               smax=stream["smax"])

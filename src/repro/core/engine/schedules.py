@@ -44,8 +44,8 @@ import numpy as np
 from repro.core.plan import bucket_size
 
 __all__ = ["BatchedUpwardSchedule", "EngineTables", "build_batched_upward",
-           "build_engine_tables", "stack_bodies", "stack_reference_bodies",
-           "shape_class_digest"]
+           "build_engine_tables", "build_p2p_stream_tables", "stack_bodies",
+           "stack_reference_bodies", "shape_class_digest"]
 
 
 def shape_class_digest(tables: dict) -> str:
@@ -212,6 +212,94 @@ def _let_bookkeeping(let):
             "engine tables need LET refresh bookkeeping (cell_src/body_src); "
             "this LET was extracted by the reference path")
     return let.cell_src, let.body_src
+
+
+def build_p2p_stream_tables(p2p_buckets, block_t: int) -> dict | None:
+    """Collapse every P2P width-class bucket into ONE unified tile table for
+    the streaming kernel (repro.kernels.p2p_stream).
+
+    The gathered path launches one `pallas_call` + one XLA gather per width
+    class; the streaming kernel instead runs ALL classes as one grid of
+    target tiles, DMA-ing each tile's source/target slabs from the flat
+    payload inside the kernel.  That only works because the bucket gather
+    rows are *contiguous runs* of flat body ids (`plan.padded_body_gather`
+    emits `body_start + arange`, and LET body translation preserves per-leaf
+    runs), so a row reduces to `(start, length)` — one slab DMA instead of a
+    per-element gather.  This builder VERIFIES that invariant row by row and
+    returns None when any row violates it (the engine then falls back to the
+    gathered buckets for that geometry — correctness never depends on the
+    fast path).
+
+    Returns a dict of frozen tables (payload-independent, device-memoizable):
+
+      meta     (Ti, 4) int32 — per-tile [src_start, src_len, tgt_start,
+               tgt_len]; dead padding tiles carry tgt_len == 0 and are
+               pruned inside the kernel (no DMA, no compute).
+      out_idx  (Ti, block_t) int64 — flat output slot per target lane
+               (dead lanes point at slot 0).
+      out_valid (Ti, block_t) bool — lane < tgt_len.
+
+    plus statics: smax (power-of-two max source width, the slab size),
+    block_t, n_tiles (== Ti, padded to a bucket_size envelope so geometries
+    of one shape class share one compiled program), n_live_tiles, and pad
+    (payload zero-padding rows so fixed-size slab DMAs never read past the
+    end: max(smax, block_t))."""
+    if not p2p_buckets:
+        return None
+    metas = []
+    smax = 8
+    for b in p2p_buckets:
+        sv, tv = b["s_valid"], b["t_valid"]
+        ws, wt = sv.shape[1], tv.shape[1]
+        live = b["mask"] != 0.0
+        if not np.all((b["mask"] == 0.0) | (b["mask"] == 1.0)):
+            return None              # non-binary mask: gathered path only
+        s_len = sv.sum(axis=1).astype(np.int64)
+        t_len = tv.sum(axis=1).astype(np.int64)
+        col_s = np.arange(ws, dtype=np.int64)
+        col_t = np.arange(wt, dtype=np.int64)
+        # valid-prefix + contiguous-run invariants (checked on live rows)
+        ok = (np.array_equal(sv[live], col_s[None, :] < s_len[live, None])
+              and np.array_equal(tv[live], col_t[None, :] < t_len[live, None])
+              and np.all(np.where(sv[live],
+                                  b["s_idx"][live] - b["s_idx"][live, :1]
+                                  == col_s[None, :], True))
+              and np.all(np.where(tv[live],
+                                  b["t_idx"][live] - b["t_idx"][live, :1]
+                                  == col_t[None, :], True)))
+        if not ok:
+            return None
+        smax = max(smax, ws)
+        s0 = b["s_idx"][live, 0]
+        t0 = b["t_idx"][live, 0]
+        sl, tl = s_len[live], t_len[live]
+        # tile each row's targets into block_t-lane tiles
+        n_t = np.maximum((tl + block_t - 1) // block_t, 1)
+        rep = np.repeat(np.arange(len(tl)), n_t)
+        k = np.arange(len(rep)) - np.repeat(np.cumsum(n_t) - n_t, n_t)
+        metas.append(np.stack([
+            s0[rep], sl[rep],
+            t0[rep] + k * block_t,
+            np.minimum(block_t, tl[rep] - k * block_t)], axis=1))
+    meta = (np.concatenate(metas, axis=0) if metas
+            else np.zeros((0, 4), np.int64))
+    meta = meta[meta[:, 3] > 0]      # rows with zero targets contribute 0
+    n_live = len(meta)
+    if n_live == 0:
+        return None
+    ti = bucket_size(n_live)
+    meta = np.concatenate(
+        [meta, np.zeros((ti - n_live, 4), np.int64)], axis=0)
+    if int(meta.max()) + max(smax, block_t) >= np.iinfo(np.int32).max:
+        return None                  # flat ids must survive int32 meta
+    lane = np.arange(block_t, dtype=np.int64)
+    out_valid = lane[None, :] < meta[:, 3:4]
+    out_idx = np.where(out_valid, meta[:, 2:3] + lane[None, :], 0)
+    return {"meta": meta.astype(np.int32), "out_idx": out_idx,
+            "out_valid": out_valid, "smax": int(smax),
+            "block_t": int(block_t), "n_tiles": int(ti),
+            "n_live_tiles": int(n_live),
+            "pad": int(max(smax, block_t))}
 
 
 def build_engine_tables(geo) -> EngineTables:

@@ -85,6 +85,28 @@ measured exchange time against the LogGP prediction (`model_drift`).
 Disabled — the default — it costs one global load per call site;
 `FMMSession.report()` and `Tracer.to_chrome_trace()` are the read side.
 
+Streaming vs gathered P2P.  The engine evaluates the near field one of two
+ways.  The *gathered* path (`engine/p2p.p2p_bucket_vals`) materializes each
+width-class bucket's `(pairs, S, 3)`/`(pairs, S)` operands via XLA gathers
+before its launch — robust to any index pattern, but one HBM round-trip per
+bucket.  The *streaming* path (`engine/schedules.build_p2p_stream_tables` +
+`kernels/p2p_stream`) concatenates ALL width classes into one unified tile
+table `[src_start, src_len, tgt_start, tgt_len]` and runs one grid that
+gathers source/target slabs inside the kernel as double-buffered VMEM DMAs.
+It is only legal because this module's gather tables make every bucket
+row's flat ids a contiguous run (`padded_body_gather` emits
+`body_start + arange`, and the engine's LET translation preserves per-leaf
+runs); `build_p2p_stream_tables` verifies that invariant at build time and
+returns None on violation, falling back to gathered buckets — correctness
+never depends on the fast path.  Selection: `FMMSession(p2p_stream=...)`,
+default on iff the backend is TPU (`engine.default_p2p_stream`); with
+`use_kernels=False` the same unified table runs as one XLA slab program
+(`p2p_stream_gathered`), the CPU/CI route.  VMEM budget: scratch is
+`n_buffers * 4 * (smax + block_t)` f32s (SoA [x;y;z;q] source + target
+slabs), and the `(block_t, n_buffers)` autotune (`kernels.p2p
+.best_stream_params`) shrinks block_t until two buffers fit ~1 MB, keeping
+double buffering resident alongside the accumulator tile.
+
 A plan is built once and executed many times — time-stepped N-body where
 geometry changes slowly, or protocol sweeps over the same partitioning —
 which is what makes the host side disappear from the hot path.  All plan

@@ -32,6 +32,7 @@ from jax.experimental import pallas as pl
 
 TB = 128                        # default target block (lane-aligned)
 BLOCK_CANDIDATES = (128, 256, 512)
+STREAM_BUFFER_CANDIDATES = (2, 3)   # double vs triple buffering (p2p_stream)
 
 # (S, n_pairs, T) -> chosen target block size.  Keyed by the bucket's padded
 # shape class, NOT by array identity: every execution of the same geometry
@@ -40,12 +41,25 @@ BLOCK_CANDIDATES = (128, 256, 512)
 # target width need different tilings.
 _BLOCK_CACHE: dict[tuple[int, int, int], int] = {}
 
+# (smax, n_rows, wt_max) -> (block_t, n_buffers) for the streaming kernel
+# (repro.kernels.p2p_stream): a 2-D autotune space — the VMEM target tile
+# AND the DMA pipeline depth — keyed by the unified stream schedule's
+# block_t-independent shape class.
+_STREAM_CACHE: dict[tuple[int, int, int], tuple[int, int]] = {}
+
 # --- on-disk persistence of MEASURED autotune choices ----------------------
 # Measured sweeps (real device backends) are the expensive part of warmup;
 # persisting them keyed by (backend, shape class) lets repeat runs — and
 # serving fleets — skip the sweep entirely.  Interpret-mode heuristics are
 # free to recompute and are never persisted, so CPU test runs touch no disk.
 # Opt out with REPRO_P2P_CACHE=0; relocate with REPRO_P2P_CACHE_PATH.
+#
+# Schema (version 2): {"version": 2, "entries": {backend: {key: value}}}.
+# Keys are "S,n,T" (gathered kernel, value = int block_t) or
+# "stream:smax,rows,wt" (streaming kernel, value = [block_t, n_buffers]).
+# The original unversioned format ({backend: {"S,n,T": int}}) is migrated
+# silently on read and rewritten as version 2 on the next save; files with
+# an UNKNOWN (future) version are ignored rather than misread as shape keys.
 #
 # Degradation contract: the disk cache is an optimization, NEVER a
 # correctness or liveness dependency.  An unreadable/unwritable location
@@ -54,6 +68,7 @@ _BLOCK_CACHE: dict[tuple[int, int, int], int] = {}
 # touches the disk again — a mid-benchmark run must not crash or spam.
 _PERSIST_LOADED = False
 _PERSIST_BROKEN = False
+_SCHEMA_VERSION = 2
 
 
 def _cache_io_failed(action: str, exc: BaseException) -> None:
@@ -81,8 +96,26 @@ def _persist_path() -> str:
         "p2p_block_cache.json")
 
 
+def _parse_entries(data) -> dict:
+    """Normalize an on-disk payload to {backend: {key_str: value}}.
+
+    Accepts the current versioned schema AND the original unversioned
+    format (silent migration: version 1 was exactly the entries mapping).
+    Anything else — including a FUTURE version this build does not
+    understand — yields {} so stale processes never misread new keys."""
+    if not isinstance(data, dict):
+        return {}
+    version = data.get("version")
+    if version is None:                      # legacy v1: entries at top level
+        return {k: v for k, v in data.items() if isinstance(v, dict)}
+    if version == _SCHEMA_VERSION:
+        entries = data.get("entries", {})
+        return entries if isinstance(entries, dict) else {}
+    return {}                                # unknown/future schema: ignore
+
+
 def _load_persisted(backend: str) -> None:
-    """Merge this backend's persisted choices into the in-process cache
+    """Merge this backend's persisted choices into the in-process caches
     (once per process; in-process entries win)."""
     global _PERSIST_LOADED
     if _PERSIST_LOADED:
@@ -98,48 +131,79 @@ def _load_persisted(backend: str) -> None:
     except OSError as exc:           # unreadable location: warn once, degrade
         _cache_io_failed("read", exc)
         return
-    for k, v in data.get(backend, {}).items():
+    for k, v in _parse_entries(data).get(backend, {}).items():
         try:
+            if k.startswith("stream:"):
+                sm, rows, wt = (int(t) for t in k[len("stream:"):].split(","))
+                bt, nb = int(v[0]), int(v[1])
+                if bt > 0 and bt % 128 == 0 and nb in STREAM_BUFFER_CANDIDATES:
+                    _STREAM_CACHE.setdefault((sm, rows, wt), (bt, nb))
+                continue
             S, n, T = (int(t) for t in k.split(","))
             choice = int(v)
-        except (TypeError, ValueError):
+        except (TypeError, ValueError, IndexError):
             continue
-        if choice in BLOCK_CANDIDATES:
+        # effective_block_t may clamp candidates to any lane-aligned width
+        # (e.g. 384), so validate alignment, not membership in CANDIDATES
+        if choice > 0 and choice % 128 == 0:
             _BLOCK_CACHE.setdefault((S, n, T), choice)
 
 
-def _save_persisted(backend: str, key: tuple, choice: int) -> None:
-    """Read-merge-write (atomic rename); an unwritable location warns once
-    (`_cache_io_failed`) and flips to in-memory-only — the cache is an
-    optimization, never a correctness dependency."""
+def _save_persisted(backend: str, key_str: str, value) -> None:
+    """Read-merge-write (atomic rename) in the versioned schema — a legacy
+    unversioned file is migrated wholesale on the first save.  An unwritable
+    location warns once (`_cache_io_failed`) and flips to in-memory-only —
+    the cache is an optimization, never a correctness dependency."""
     path = _persist_path()
     try:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         try:
             with open(path) as f:
-                data = json.load(f)
+                entries = _parse_entries(json.load(f))
         except (OSError, ValueError):
-            data = {}
-        data.setdefault(backend, {})[",".join(map(str, key))] = int(choice)
+            entries = {}
+        entries.setdefault(backend, {})[key_str] = value
         tmp = f"{path}.{os.getpid()}.tmp"
         with open(tmp, "w") as f:
-            json.dump(data, f, indent=1, sort_keys=True)
+            json.dump({"version": _SCHEMA_VERSION, "entries": entries},
+                      f, indent=1, sort_keys=True)
         os.replace(tmp, path)
     except OSError as exc:
         _cache_io_failed("write", exc)
 
 
-def _p2p_kernel(q_ref, xs_ref, xt_ref, out_ref):
-    # blocks: q (1, S); xs (1, 3, S); xt (1, 3, block_t); out (1, block_t)
-    q = q_ref[0]                    # (S,)
-    xs = xs_ref[0]                  # (3, S)
-    xt = xt_ref[0]                  # (3, block_t)
+def _tile_phi(q, xs, xt):
+    """One VMEM tile of the Laplace direct sum: q (S,) · xs (3, S) SoA ·
+    xt (3, block_t) SoA -> phi (block_t,).  Shared verbatim by the gathered
+    kernel below and the streaming kernel (repro.kernels.p2p_stream), which
+    is what makes the two paths bitwise-comparable: identical expressions on
+    identically shaped tiles."""
     dx = xt[0][:, None] - xs[0][None, :]       # (block_t, S)
     dy = xt[1][:, None] - xs[1][None, :]
     dz = xt[2][:, None] - xs[2][None, :]
     r2 = dx * dx + dy * dy + dz * dz
     inv_r = jnp.where(r2 > 0.0, jax.lax.rsqrt(jnp.maximum(r2, 1e-30)), 0.0)
-    out_ref[0] = jnp.sum(inv_r * q[None, :], axis=1)
+    return jnp.sum(inv_r * q[None, :], axis=1)
+
+
+def effective_block_t(T: int, block_t: int) -> int:
+    """The target tile width actually worth launching: never wider than the
+    128-lane-aligned cover of T.  An autotuned 512 block on a 64-target
+    bucket would compute 448 garbage lanes per tile — clamping to the cover
+    (128 here) stops paying for them without changing any valid lane."""
+    return max(128, min(block_t, ((T + 127) // 128) * 128))
+
+
+def _p2p_kernel(q_ref, xs_ref, xt_ref, out_ref, *, t_total, block_t):
+    # blocks: q (1, S); xs (1, 3, S); xt (1, 3, block_t); out (1, block_t)
+    phi = _tile_phi(q_ref[0], xs_ref[0], xt_ref[0])
+    if t_total % block_t:
+        # partial tail tile: zero the padded lanes (cheap VPU select) so
+        # padded targets return 0 instead of garbage
+        lane = (pl.program_id(1) * block_t
+                + jax.lax.broadcasted_iota(jnp.int32, (1, block_t), 1)[0])
+        phi = jnp.where(lane < t_total, phi, 0.0)
+    out_ref[0] = phi
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_t"))
@@ -147,15 +211,19 @@ def p2p_pallas(q, x_src, x_tgt, *, interpret: bool = True,
                block_t: int = TB):
     """q: (P, S); x_src: (P, S, 3); x_tgt: (P, T, 3) -> (P, T).
 
-    Padding convention: padded sources carry q = 0; padded targets produce
-    garbage rows the caller discards (same convention as the jnp reference).
-    `block_t` is the VMEM target tile (lane-aligned multiple of 128); pick it
-    with `best_block_t` for bucketed shapes.
+    Padding convention: padded sources carry q = 0; padded target lanes
+    return exactly 0 (the tail tile masks them — the jnp reference's
+    garbage rows were always discarded by callers, so only the zeros are
+    observable).  `block_t` is the VMEM target tile (lane-aligned multiple
+    of 128), clamped to the 128-aligned cover of T (`effective_block_t`)
+    so narrow buckets never pay for lanes past their width; pick it with
+    `best_block_t` for bucketed shapes.
     """
     if block_t % 128 != 0:
         raise ValueError(f"block_t must be a multiple of 128, got {block_t}")
     P, S, _ = x_src.shape
     T = x_tgt.shape[1]
+    block_t = effective_block_t(T, block_t)
     pad_t = (-T) % block_t
     xt = jnp.pad(x_tgt, ((0, 0), (0, pad_t), (0, 0)))
     Tp = T + pad_t
@@ -164,7 +232,7 @@ def p2p_pallas(q, x_src, x_tgt, *, interpret: bool = True,
     xt_t = jnp.swapaxes(xt, 1, 2)        # (P, 3, Tp)
 
     out = pl.pallas_call(
-        _p2p_kernel,
+        functools.partial(_p2p_kernel, t_total=T, block_t=block_t),
         grid=(P, Tp // block_t),
         in_specs=[
             pl.BlockSpec((1, S), lambda p, t: (p, 0)),
@@ -221,8 +289,11 @@ def best_block_t(S: int, n_pairs: int, T: int = TB, *,
         import statistics
         import time
         q, xs, xt = sample
-        best, choice = float("inf"), BLOCK_CANDIDATES[0]
-        for cand in BLOCK_CANDIDATES:
+        # candidates above the 128-aligned cover of T collapse to the same
+        # effective tiling (effective_block_t) — time each tiling once
+        cands = sorted({effective_block_t(T, c) for c in BLOCK_CANDIDATES})
+        best, choice = float("inf"), cands[0]
+        for cand in cands:
             fn = lambda: p2p_pallas(q, xs, xt, interpret=False, block_t=cand)
             jax.block_until_ready(fn())          # compile + warm
             reps = []
@@ -234,11 +305,83 @@ def best_block_t(S: int, n_pairs: int, T: int = TB, *,
             if dt < best:
                 best, choice = dt, cand
         if persist:
-            _save_persisted(jax.default_backend(), key, choice)
+            _save_persisted(jax.default_backend(),
+                            ",".join(map(str, key)), int(choice))
     _BLOCK_CACHE[key] = choice
     obs.counter_add("p2p.autotune.decisions")
     if obs.enabled():
         obs.event("p2p.autotune",
                   {"S": int(S), "n_pairs": int(n_pairs), "T": int(T),
                    "block_t": int(choice), "mode": mode})
+    return choice
+
+
+def _heuristic_stream_params(smax: int, wt_max: int) -> tuple[int, int]:
+    """Interpret-mode / cold-cache choice for the streaming kernel's 2-D
+    space.  block_t: smallest candidate covering the widest target class
+    (fewer tiles), shrunk until NB=2 buffers of (sources slab + targets +
+    phi) fit a ~1 MB VMEM scratch budget.  n_buffers: 2 — triple buffering
+    only pays when DMA latency exceeds one tile's compute, which the
+    measured sweep (real backends) detects and heuristics can't."""
+    nb = 2
+    choice = BLOCK_CANDIDATES[0]
+    for c in BLOCK_CANDIDATES:
+        if nb * (4 * smax + 4 * c) * 4 > 1 << 20:   # (3+1)*SM + (3+1)*bt f32s
+            break
+        choice = c
+        if c >= wt_max:
+            break
+    return choice, nb
+
+
+def best_stream_params(smax: int, n_rows: int, wt_max: int, *,
+                       interpret: bool = True,
+                       measure=None) -> tuple[int, int]:
+    """Autotuned (block_t, n_buffers) for the streaming P2P kernel
+    (repro.kernels.p2p_stream), cached by the stream schedule's
+    block_t-independent shape class (smax, n_rows, wt_max).
+
+    On a real backend the first call sweeps the 2-D candidate grid through
+    `measure(block_t, n_buffers) -> seconds` (a caller-supplied closure that
+    rebuilds the stream tables for that block and times the kernel) and
+    keeps the argmin; under interpret mode a VMEM-budget heuristic is cached
+    instead.  Measured choices persist alongside the gathered-kernel entries
+    ("stream:" key prefix, versioned schema)."""
+    key = (int(smax), int(n_rows), int(wt_max))
+    persist = not interpret and _persist_enabled() and not _PERSIST_BROKEN
+    if persist:
+        _load_persisted(jax.default_backend())
+        persist = not _PERSIST_BROKEN
+    from repro import obs
+    hit = _STREAM_CACHE.get(key)
+    if hit is not None:
+        obs.counter_add("p2p.autotune.cache_hits")
+        return hit
+    if interpret or measure is None:
+        mode = "heuristic"
+        choice = _heuristic_stream_params(smax, wt_max)
+    else:
+        mode = "measured"
+        import statistics
+        bt_cands = sorted({effective_block_t(wt_max, c)
+                           for c in BLOCK_CANDIDATES})
+        best = float("inf")
+        choice = (bt_cands[0], STREAM_BUFFER_CANDIDATES[0])
+        for bt in bt_cands:
+            for nb in STREAM_BUFFER_CANDIDATES:
+                reps = [measure(bt, nb) for _ in range(3)]
+                dt = statistics.median(reps)
+                if dt < best:
+                    best, choice = dt, (bt, nb)
+        if persist:
+            _save_persisted(jax.default_backend(),
+                            "stream:" + ",".join(map(str, key)),
+                            [int(choice[0]), int(choice[1])])
+    _STREAM_CACHE[key] = choice
+    obs.counter_add("p2p.autotune.decisions")
+    if obs.enabled():
+        obs.event("p2p.autotune.stream",
+                  {"smax": int(smax), "n_rows": int(n_rows),
+                   "wt_max": int(wt_max), "block_t": int(choice[0]),
+                   "n_buffers": int(choice[1]), "mode": mode})
     return choice

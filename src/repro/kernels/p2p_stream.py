@@ -1,0 +1,140 @@
+"""Streaming P2P megakernel: in-kernel gather + double-buffered VMEM DMA.
+
+The gathered path (`kernels.p2p` + `engine.p2p._gather_bucket`) makes XLA
+materialize every width-class bucket's `(pairs, S, 3)`/`(pairs, S)` operands
+in HBM before each `pallas_call` — one full HBM round-trip per bucket per
+evaluate, the headline remaining headroom after the PR-6 fused launch.  This
+kernel removes the round-trip: it takes the flat device payload and a
+scalar-prefetched tile table (`schedules.build_p2p_stream_tables`) and does
+the gather *inside* the kernel as slab DMAs into VMEM scratch, pipelined so
+tile i+1's slabs stream in while tile i computes — the on-chip analogue of
+the paper's overlap-communication-with-computation argument, at DMA
+granularity instead of network granularity.
+
+Layout contract (shared with `engine.p2p.stream_payload`):
+
+  payload  (4, F) f32 — structure-of-arrays [x; y; z; q] over the flat body
+           axis `F = n_parts * n_bodies_max + pad`.  The `pad` tail rows are
+           zero so every fixed-size slab read `[:, start : start + width]`
+           stays in bounds; slab lanes past a tile's source count carry
+           neighbouring bodies' data and are neutralized by masking q to 0
+           (coordinates may be garbage: 1/r of a garbage distance times
+           q == 0 contributes exactly +0.0).
+  meta     (Ti, 4) int32 — [src_start, src_len, tgt_start, tgt_len] per
+           tile, scalar-prefetched to SMEM so DMA addresses for tile i+1
+           are known while tile i computes.  Tiles with tgt_len == 0 are
+           dead padding: no DMA, no compute, zero output.
+
+Pipelining: `n_buffers` VMEM slots (2 = classic double buffering) rotate
+over the grid; step i waits on slot i % NB and starts the slabs for step
+i + NB - 1.  The tile body itself is `kernels.p2p._tile_phi` — the same
+expression the gathered kernel runs — so on identical slab values the two
+paths are bitwise-equal (pinned in tests/test_p2p_stream.py).
+
+Interpret mode runs the same program through the Pallas emulator (DMAs
+become copies), which is what CI pins on CPU; `best_stream_params` picks
+`(block_t, n_buffers)` per stream shape class on real backends.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.p2p import _tile_phi
+
+__all__ = ["p2p_stream", "stream_tile_phi"]
+
+
+def stream_tile_phi(src_slab, tgt_slab, s_len):
+    """One streaming tile on (4, smax) / (4, block_t) payload slabs: mask
+    charges past `s_len`, then the shared `_tile_phi` body.  Factored so the
+    XLA reference path (`engine.p2p`) and tests run the exact expression the
+    kernel runs."""
+    smax = src_slab.shape[1]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, smax), 1)[0]
+    q = jnp.where(lane < s_len, src_slab[3], 0.0)
+    return _tile_phi(q, src_slab[:3], tgt_slab[:3])
+
+
+def _stream_kernel(meta_ref, pay_ref, out_ref, src_buf, tgt_buf,
+                   src_sem, tgt_sem, *, block_t, smax, n_buffers, n_tiles):
+    i = pl.program_id(0)
+
+    def slabs(step, slot):
+        return (
+            pltpu.make_async_copy(
+                pay_ref.at[:, pl.ds(meta_ref[step, 0], smax)],
+                src_buf.at[slot], src_sem.at[slot]),
+            pltpu.make_async_copy(
+                pay_ref.at[:, pl.ds(meta_ref[step, 2], block_t)],
+                tgt_buf.at[slot], tgt_sem.at[slot]))
+
+    def start(step, slot):
+        # dead padding tiles (tgt_len == 0) are pruned: no DMA issued, and
+        # the matching wait below is skipped under the same predicate
+        @pl.when(meta_ref[step, 3] > 0)
+        def _():
+            for cp in slabs(step, slot):
+                cp.start()
+
+    @pl.when(i == 0)
+    def _():                                     # pipeline warmup
+        for j in range(min(n_buffers - 1, n_tiles)):
+            start(j, j)
+
+    nb = jnp.int32(n_buffers)                    # dtype-pinned (x64-safe)
+    nxt = i + n_buffers - 1
+    @pl.when(nxt < n_tiles)
+    def _():                                     # keep the pipeline full
+        start(nxt, jax.lax.rem(jnp.int32(nxt), nb))
+
+    slot = jax.lax.rem(jnp.int32(i), nb)
+
+    @pl.when(meta_ref[i, 3] > 0)
+    def _():
+        for cp in slabs(i, slot):
+            cp.wait()
+        out_ref[0] = stream_tile_phi(src_buf[slot], tgt_buf[slot],
+                                     meta_ref[i, 1])
+
+    @pl.when(meta_ref[i, 3] == 0)
+    def _():
+        out_ref[0] = jnp.zeros((block_t,), out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "smax", "n_buffers",
+                                             "interpret"))
+def p2p_stream(meta, payload, *, block_t: int, smax: int,
+               n_buffers: int = 2, interpret: bool = True):
+    """meta (Ti, 4) int32, payload (4, F) f32 -> phi (Ti, block_t) f32.
+
+    `payload` must carry at least `max(smax, block_t)` zero rows past the
+    last addressable body (`build_p2p_stream_tables`'s `pad`); lanes past a
+    tile's tgt_len return the same values the gathered kernel would and are
+    masked at accumulation via the stream table's `out_valid`."""
+    if block_t % 128 != 0:
+        raise ValueError(f"block_t must be a multiple of 128, got {block_t}")
+    n_tiles = meta.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec((1, block_t), lambda i, *_: (i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((n_buffers, 4, smax), jnp.float32),
+            pltpu.VMEM((n_buffers, 4, block_t), jnp.float32),
+            pltpu.SemaphoreType.DMA((n_buffers,)),
+            pltpu.SemaphoreType.DMA((n_buffers,)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_stream_kernel, block_t=block_t, smax=smax,
+                          n_buffers=n_buffers, n_tiles=n_tiles),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_tiles, block_t), payload.dtype),
+        interpret=interpret,
+    )(meta, payload)

@@ -79,6 +79,35 @@ def test_fused_matches_per_phase_property(seed, n_parts, ncrit):
     np.testing.assert_allclose(got, want, rtol=1e-6, atol=2e-5)
 
 
+@given(st.integers(0, 10_000), st.integers(1, 3),
+       st.sampled_from(["plummer", "sphere"]))
+@settings(max_examples=4, deadline=None)
+def test_stream_matches_gathered_property(seed, n_parts, dist):
+    """The streaming near field (unified tile table + slab gathers,
+    repro.kernels.p2p_stream) must match the gathered-bucket engine at the
+    tight x64 tolerances for ANY geometry the planner produces — ragged
+    width classes, boundary (surface) distributions, empty partitions.  The
+    sphere case is the paper's boundary-distribution regime, where leaf
+    populations (and therefore stream source widths) are most ragged."""
+    import jax
+    from repro.core.api import PartitionSpec, plan_geometry
+    from repro.core.engine import DeviceEngine
+    rng = np.random.default_rng(seed)
+    x = make_distribution(dist, 300, seed=seed)
+    q = rng.uniform(-1, 1, 300)
+    geo = plan_geometry(x, q, PartitionSpec(nparts=n_parts, ncrit=32))
+    jax.config.update("jax_enable_x64", True)
+    try:
+        want = np.asarray(DeviceEngine(geo, use_kernels=False, fused=False,
+                                       p2p_stream=False).evaluate_device())
+        eng = DeviceEngine(geo, use_kernels=False, fused=False,
+                           p2p_stream=True)
+        got = np.asarray(eng.evaluate_device())
+    finally:
+        jax.config.update("jax_enable_x64", False)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=2e-5)
+
+
 @given(st.integers(0, 5_000))
 @settings(max_examples=6, deadline=None)
 def test_batched_upward_empty_sentinel_partitions(seed):

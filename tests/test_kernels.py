@@ -127,6 +127,7 @@ def _fake_measured_autotune(monkeypatch, tmp_path):
     monkeypatch.setenv("REPRO_P2P_CACHE_PATH", str(tmp_path / "cache.json"))
     monkeypatch.delenv("REPRO_P2P_CACHE", raising=False)
     monkeypatch.setattr(kp, "_BLOCK_CACHE", {})
+    monkeypatch.setattr(kp, "_STREAM_CACHE", {})
     monkeypatch.setattr(kp, "_PERSIST_LOADED", False)
     monkeypatch.setattr(kp, "_PERSIST_BROKEN", False)
     calls = []
@@ -151,10 +152,11 @@ def test_autotune_persists_measured_choice(monkeypatch, tmp_path):
               jnp.zeros((2, 64, 3), jnp.float32),
               jnp.zeros((2, 40, 3), jnp.float32))
     choice = kp.best_block_t(64, 2, 40, interpret=False, sample=sample)
-    assert choice in kp.BLOCK_CANDIDATES and calls
+    assert choice % 128 == 0 and calls
     data = json.loads((tmp_path / "cache.json").read_text())
     backend = jax.default_backend()
-    assert data[backend]["64,2,40"] == choice
+    assert data["version"] == kp._SCHEMA_VERSION      # versioned schema
+    assert data["entries"][backend]["64,2,40"] == choice
 
     # "new process": clear the in-memory cache, keep the disk file
     monkeypatch.setattr(kp, "_BLOCK_CACHE", {})
@@ -162,6 +164,75 @@ def test_autotune_persists_measured_choice(monkeypatch, tmp_path):
     calls.clear()
     assert kp.best_block_t(64, 2, 40, interpret=False, sample=sample) == choice
     assert calls == []                  # served from disk, no warmup sweep
+
+
+def test_autotune_legacy_unversioned_cache_migrates(monkeypatch, tmp_path):
+    """The original unversioned on-disk format ({backend: {key: block}})
+    loads silently (v1 migration), and the first save rewrites the file in
+    the versioned schema without dropping migrated entries.  A FUTURE
+    version this build does not understand is ignored, never misread."""
+    import json
+    kp, calls = _fake_measured_autotune(monkeypatch, tmp_path)
+    backend = jax.default_backend()
+    (tmp_path / "cache.json").write_text(
+        json.dumps({backend: {"64,2,40": 256}}))    # legacy v1 layout
+    assert kp.best_block_t(64, 2, 40, interpret=False) == 256
+    assert calls == []                  # migrated entry served, no sweep
+
+    # a save migrates the whole file to the versioned layout
+    sample = (jnp.zeros((2, 128), jnp.float32),
+              jnp.zeros((2, 128, 3), jnp.float32),
+              jnp.zeros((2, 200, 3), jnp.float32))
+    kp.best_block_t(128, 2, 200, interpret=False, sample=sample)
+    data = json.loads((tmp_path / "cache.json").read_text())
+    assert data["version"] == kp._SCHEMA_VERSION
+    assert data["entries"][backend]["64,2,40"] == 256     # survived migration
+    assert "128,2,200" in data["entries"][backend]
+
+    # future-versioned file: ignored wholesale (sweep re-runs, no crash)
+    (tmp_path / "cache.json").write_text(
+        json.dumps({"version": 99, "entries": {backend: {"64,2,40": 512}}}))
+    monkeypatch.setattr(kp, "_BLOCK_CACHE", {})
+    monkeypatch.setattr(kp, "_PERSIST_LOADED", False)
+    calls.clear()
+    kp.best_block_t(64, 2, 40, interpret=False,
+                    sample=(jnp.zeros((2, 64), jnp.float32),
+                            jnp.zeros((2, 64, 3), jnp.float32),
+                            jnp.zeros((2, 40, 3), jnp.float32)))
+    assert calls                        # not served from the future file
+
+
+def test_stream_autotune_heuristic_and_persistence(monkeypatch, tmp_path):
+    """best_stream_params: interpret mode caches a VMEM-budget heuristic
+    (never touching disk); a measured sweep persists its [block_t,
+    n_buffers] under the "stream:" key prefix alongside the gathered
+    entries, and a fresh process-alike reloads it without re-measuring."""
+    import json
+    kp, _ = _fake_measured_autotune(monkeypatch, tmp_path)
+    bt, nb = kp.best_stream_params(256, 40, 64, interpret=True)
+    assert bt % 128 == 0 and nb in kp.STREAM_BUFFER_CANDIDATES
+    assert not (tmp_path / "cache.json").exists()
+
+    measured = []
+
+    def fake_measure(block_t, n_buffers):
+        measured.append((block_t, n_buffers))
+        return 0.1 if (block_t, n_buffers) == (128, 3) else 1.0
+
+    monkeypatch.setattr(kp, "_STREAM_CACHE", {})
+    choice = kp.best_stream_params(256, 40, 512, interpret=False,
+                                   measure=fake_measure)
+    assert choice == (128, 3) and measured
+    data = json.loads((tmp_path / "cache.json").read_text())
+    entry = data["entries"][jax.default_backend()]["stream:256,40,512"]
+    assert entry == [128, 3]
+
+    monkeypatch.setattr(kp, "_STREAM_CACHE", {})
+    monkeypatch.setattr(kp, "_PERSIST_LOADED", False)
+    measured.clear()
+    assert kp.best_stream_params(256, 40, 512, interpret=False,
+                                 measure=fake_measure) == (128, 3)
+    assert measured == []               # served from disk, no sweep
 
 
 def test_autotune_persistence_env_opt_out(monkeypatch, tmp_path):
