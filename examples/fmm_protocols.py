@@ -151,6 +151,29 @@ def main():
               f"--xla_force_host_platform_device_count=4 before python to "
               f"run the LET exchange over real wires)")
 
+    # --- resilience: inject a fault, watch the ladder absorb it -----------
+    # A resilient session walks the degradation ladder (dist -> streaming
+    # -> gathered -> xla_slab -> per_phase -> host f64 reference) instead
+    # of raising: here the fused megakernel launch is killed with a
+    # simulated RESOURCE_EXHAUSTED (the OOM an oversubscribed accelerator
+    # raises), the session drops one rung, recomputes, and reports the
+    # downgrade.  `REPRO_FAULTS="fused.launch:1"` arms the same plan from
+    # the environment; `REPRO_RESILIENCE=1` flips the default on.
+    import warnings
+    from repro.resilience import inject_faults
+    rsess = FMMSession(sess.geometry, engine=True, fused=True,
+                       use_kernels=False, p2p_stream=False, resilience=True)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        with inject_faults("fused.launch"):
+            rphi = rsess.evaluate()
+    blk = rsess.report()["resilience"]
+    fb = blk["fallbacks"][0]
+    assert np.allclose(rphi, phi, rtol=1e-6, atol=2e-5)
+    print(f"chaos: killed {fb['site']} -> degraded {fb['from']!r} to "
+          f"{fb['to']!r}, phi parity kept "
+          f"(degraded={blk['degraded']}, rung={blk['rung']})")
+
 
 if __name__ == "__main__":
     main()

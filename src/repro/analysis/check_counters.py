@@ -16,7 +16,11 @@ rest on (ISSUE 8 regression gate):
   4. every dist protocol's exchange program delivers exactly the
      rank-aggregated off-diagonal `GeometryPlan.bytes_matrix`;
   5. each protocol's `model_drift` (measured / LogGP exchange time) is
-     finite and positive — the probe itself works.
+     finite and positive — the probe itself works;
+  6. resilience invariants (ISSUE 10): resilience armed with no faults
+     keeps the warm fused one-launch contract and a False `degraded` flag,
+     and after a chaos drive every injected fault is either a counted
+     fallback or a typed `ResilienceError` (the accounting identity).
 
 Exits nonzero on any violation, printing each check; writes the full
 `report()` JSON and the chrome trace as artifacts under `--out` so a CI
@@ -133,6 +137,63 @@ def main() -> int:
     check(inter == expect,
           "rank_bytes aggregates GeometryPlan.bytes_matrix's inter-rank "
           f"entries exactly ({inter} == {expect})")
+
+    # --- resilience invariants (ISSUE 10 gate) -----------------------------
+    import warnings
+
+    from repro.resilience import fallback as res_fb
+    from repro.resilience import faults as res_faults
+    from repro.resilience import ResilienceError, inject_faults
+
+    res_faults.reset_stats()
+    res_fb.reset_ledger()
+
+    # 1. resilience armed with NO faults must not perturb the serving path:
+    #    warm fused evaluate stays exactly one entry computation
+    rcache = ExecutableCache()
+    rsess = FMMSession(plan_geometry(x, q, spec), engine=True, fused=True,
+                       use_kernels=False, exe_cache=rcache, resilience=True)
+    rsess.evaluate()
+    rsess.evaluate()
+    (rentry, _rt) = rsess.engine._entries[("evaluate",
+                                           bool(jax.config.jax_enable_x64))]
+    check(count_entry_launches(rentry.hlo_text) == 1,
+          "warm fused evaluate with resilience ENABLED (no faults) still "
+          "compiles to exactly 1 entry computation")
+    check(not rsess.resilience.degraded,
+          "resilience enabled + no faults -> degraded flag stays False")
+    check(res_faults.fired_total() == 0,
+          "no armed plan -> zero faults fired")
+
+    # 2. chaos accounting identity: drive a fallback AND a typed error, then
+    #    every fired fault must be a counted fallback or a typed error
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        c1 = FMMSession(plan_geometry(x, q, spec), engine=True, fused=True,
+                        use_kernels=False, exe_cache=ExecutableCache(),
+                        resilience=True)
+        with inject_faults("fused.launch"):
+            c1.evaluate()
+        check(c1.resilience.degraded
+              and c1.resilience.fallbacks[0]["site"] == "fused.launch",
+              "injected fused.launch RESOURCE_EXHAUSTED -> one counted "
+              "ladder fallback")
+        c2 = FMMSession(plan_geometry(x, q, spec), engine=False,
+                        resilience=True)
+        got_typed = False
+        try:
+            with inject_faults({"memo.upload": {"count": None}}):
+                c2.evaluate()
+        except ResilienceError as exc:
+            got_typed = exc.site == "memo.upload"
+        check(got_typed,
+              "ladder exhaustion surfaces a typed ResilienceError naming "
+              "the site")
+    fired = res_faults.fired_total()
+    absorbed = res_fb.fallback_total() + res_fb.typed_error_total()
+    check(fired > 0 and fired == absorbed,
+          f"chaos accounting: injected faults ({fired}) == counted "
+          f"fallbacks + typed errors ({absorbed})")
 
     # --- artifacts ---------------------------------------------------------
     if args.out:

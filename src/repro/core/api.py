@@ -57,6 +57,7 @@ byte-identical by golden tests.
 from __future__ import annotations
 
 import math
+import os
 import weakref
 from dataclasses import dataclass, field, replace as dc_replace
 
@@ -66,6 +67,8 @@ import numpy as np
 
 from repro import obs
 from repro.core import protocols as proto
+from repro.resilience import fallback as _rfb
+from repro.resilience import faults as _rfaults
 from repro.core.fmm import (_resolve_kernels, downward_pass, l2p_pass,
                             m2l_apply, m2p_apply, p2p_apply, upward_pass)
 from repro.core.hsdx import adjacency_from_boxes, graph_diameter
@@ -272,6 +275,7 @@ class DeviceMemo:
             self.hits += 1
             obs.counter_add("memo.hits")
             return hit[1]
+        _rfaults.fire("memo.upload")
         self.misses += 1
         obs.counter_add("memo.misses")
         if obs.enabled():
@@ -304,6 +308,39 @@ class DeviceMemo:
 
 
 # --------------------------------------------------------------- layer 1 ---
+def _validate_geometry_inputs(x, q, spec: PartitionSpec) -> None:
+    """Reject degenerate inputs at the API boundary with the offending
+    argument NAMED, instead of failing deep inside partitioning (a zero-size
+    reduction) or silently producing garbage (NaN coordinates survive the
+    morton cast with only a RuntimeWarning).
+
+    Deliberately NOT rejected: n < nparts.  Partitions holding no points are
+    a supported configuration — they carry the empty-box sentinel
+    (lo=+inf, hi=-inf) and are skipped by adjacency/LET extraction — and the
+    paper's boundary distributions depend on that path (tests pin it)."""
+    if x.ndim != 2 or x.shape[1] != 3:
+        raise ValueError(f"x: expected positions of shape (n, 3), got "
+                         f"{x.shape}")
+    if len(x) == 0:
+        raise ValueError("x: at least one body is required (got 0); empty "
+                         "PARTITIONS are fine, an empty problem is not")
+    if q.shape != (len(x),):
+        raise ValueError(f"q: expected charges of shape ({len(x)},) to "
+                         f"match x, got {q.shape}")
+    if not np.isfinite(x).all():
+        raise ValueError("x: positions contain non-finite values "
+                         "(NaN or +-inf)")
+    if not np.isfinite(q).all():
+        raise ValueError("q: charges contain non-finite values (NaN or "
+                         "+-inf)")
+    if not spec.theta > 0.0:
+        raise ValueError(f"theta: MAC opening angle must be > 0, got "
+                         f"{spec.theta}")
+    if spec.nparts < 1:
+        raise ValueError(f"nparts: need at least one partition, got "
+                         f"{spec.nparts}")
+
+
 def _partition(x, nparts, method,
                sfc_box_inflation: float = DEFAULT_SFC_BOX_INFLATION):
     """Returns (part, tight_boxes, adjacency_boxes).  ORB regions share split
@@ -419,6 +456,7 @@ def plan_geometry(x, q, spec: PartitionSpec | None = None,
     backend = resolve_traversal_backend(spec.traversal_backend)
     x = np.asarray(x, dtype=np.float64)
     q = np.asarray(q, dtype=np.float64)
+    _validate_geometry_inputs(x, q, spec)
     n = len(x)
     P = spec.nparts
     with obs.span("plan.geometry") as sp_plan:
@@ -621,7 +659,9 @@ class FMMSession:
                  fused: bool | None = None, exe_cache=None,
                  mesh=None, dist_protocol: str = "bulk",
                  dist_grain_bytes: int | None = None,
-                 p2p_stream: bool | None = None):
+                 p2p_stream: bool | None = None,
+                 resilience: bool | None = None,
+                 health_checks: bool | None = None):
         from repro.core.engine import (default_engine_enabled,
                                        default_use_kernels)
         if use_pallas is not None:      # deprecated alias, warn-once + honor
@@ -630,6 +670,11 @@ class FMMSession:
                     "pass use_kernels only; use_pallas is its deprecated "
                     "alias and conflicts when both are given")
             use_kernels = _resolve_kernels(False, use_pallas, "FMMSession")
+        if not (hasattr(geometry, "receivers")
+                and hasattr(geometry, "bytes_matrix")):
+            raise ValueError(
+                f"geometry: expected a GeometryPlan (plan_geometry(...) "
+                f"output or plan-shaped object), got {type(geometry).__name__}")
         self._geo = geometry
         self.engine_enabled = (default_engine_enabled() if engine is None
                                else bool(engine))
@@ -644,12 +689,18 @@ class FMMSession:
                              "expected 'bulk', 'grain' or 'hsdx'")
         self.dist_protocol = dist_protocol
         self.dist_grain_bytes = dist_grain_bytes
+        self.resilience = _rfb.ResilienceState(
+            enabled=(_rfb.default_resilience_enabled() if resilience is None
+                     else bool(resilience)),
+            health_checks=bool(health_checks) if health_checks is not None
+            else False)
         self._engine = None
         self._dist = None
         self._memo = DeviceMemo()
         self._comm_cache: dict = {}
         self._phi: np.ndarray | None = None
         self._phi_version = -1
+        self._exchange_verified: set = set()
 
     @classmethod
     def from_points(cls, x, q, spec: PartitionSpec | None = None,
@@ -660,13 +711,16 @@ class FMMSession:
                     mesh=None, dist_protocol: str = "bulk",
                     dist_grain_bytes: int | None = None,
                     p2p_stream: bool | None = None,
+                    resilience: bool | None = None,
+                    health_checks: bool | None = None,
                     **overrides) -> "FMMSession":
         return cls(plan_geometry(x, q, spec, **overrides), engine=engine,
                    use_kernels=use_kernels, use_pallas=use_pallas,
                    fused=fused, exe_cache=exe_cache, mesh=mesh,
                    dist_protocol=dist_protocol,
                    dist_grain_bytes=dist_grain_bytes,
-                   p2p_stream=p2p_stream)
+                   p2p_stream=p2p_stream, resilience=resilience,
+                   health_checks=health_checks)
 
     @property
     def geometry(self) -> GeometryPlan:
@@ -767,6 +821,7 @@ class FMMSession:
                          "version": int(self._geo.version),
                          "bytes_matrix_total":
                              int(self._geo.bytes_matrix.sum())},
+            "resilience": self.resilience.snapshot(),
         }
 
         # Launch accounting: per compiled fused entry, observed call count
@@ -823,27 +878,151 @@ class FMMSession:
             self._comm_cache[key] = cs
         return cs
 
+    # ------------------------------------------------------- resilience ---
+    def _current_rung(self) -> str:
+        """Classify the session's knobs onto the degradation ladder
+        (`fallback.LADDER`).  The mapping is the inverse of `_apply_rung`:
+        applying a rung then classifying returns that same rung, which is
+        what makes downgrades monotone."""
+        if self.mesh is not None:
+            return "dist"
+        if not self.engine_enabled:
+            return "reference"
+        from repro.core.engine import (default_fused_enabled,
+                                       default_p2p_stream)
+        fused = (default_fused_enabled() if self.fused is None
+                 else bool(self.fused))
+        stream = (default_p2p_stream() if self.p2p_stream is None
+                  else bool(self.p2p_stream))
+        if self.use_kernels and stream:
+            return "streaming"
+        if self.use_kernels:
+            return "gathered"
+        if stream or fused:
+            return "xla_slab"
+        return "per_phase"
+
+    def _apply_rung(self, rung: str) -> None:
+        """Mutate the session knobs to the given ladder rung and drop the
+        stale engine so the next evaluation rebuilds on the new path (the
+        memo and executable cache are shared, so the rebuild reuses every
+        uploaded table and compatible compiled entry)."""
+        if rung == "streaming":
+            self.use_kernels, self.p2p_stream = True, True
+        elif rung == "gathered":
+            self.use_kernels, self.p2p_stream = True, False
+        elif rung == "xla_slab":
+            self.use_kernels, self.p2p_stream = False, True
+        elif rung == "per_phase":
+            self.use_kernels, self.p2p_stream = False, False
+            self.fused = False
+        elif rung == "reference":
+            self.engine_enabled = False
+        else:                               # pragma: no cover - guarded
+            raise ValueError(f"unknown ladder rung {rung!r}")
+        self._engine = None
+
+    def _downgrade(self, exc: BaseException) -> None:
+        """Step one rung DOWN the ladder after `exc` killed the current one.
+        Dist failures drop the mesh and re-enter at whatever single-device
+        rung the knobs select; exhaustion below `reference` raises the
+        terminal typed `ResilienceError` carrying the failing site."""
+        frm = self._current_rung()
+        site = getattr(exc, "site", frm)
+        if frm == "dist":
+            self.mesh = None
+            self._dist = None
+            to = self._current_rung()
+        else:
+            i = _rfb.LADDER.index(frm)
+            if i + 1 >= len(_rfb.LADDER):
+                raise _rfb.ResilienceError(
+                    site, f"resilience ladder exhausted at {frm!r}: "
+                          f"{exc}") from exc
+            to = _rfb.LADDER[i + 1]
+            self._apply_rung(to)
+        self.resilience.note_fallback(site, frm, to, exc)
+
+    def _phi_healthy(self, phi) -> bool:
+        """Opt-in numerical sentinel: phi (and, engine dispatch, the cached
+        device multipoles) must be finite.  A failure is treated like any
+        rung failure — downgrade and recompute on the next rung."""
+        st = self.resilience
+        st.health["checks"] += 1
+        ok = bool(np.isfinite(phi).all())
+        if ok and self._engine is not None and self._engine._M is not None:
+            ok = bool(np.isfinite(np.asarray(self._engine._M)).all())
+        if not ok:
+            st.health["failures"] += 1
+            obs.counter_add("resilience.health_failures")
+        return ok
+
+    def _verify_exchange_once(self) -> None:
+        """REPRO_VERIFY_EXCHANGE=1: checksum every delivered wire span
+        against its sender-side payload, once per (protocol, geometry
+        version).  Raises `ExchangeVerificationError` on mismatch — terminal
+        without resilience, a dist->engine downgrade with it."""
+        key = (self.dist_protocol, self._geo.version)
+        if key in self._exchange_verified:
+            return
+        self.dist.verify_exchange(self.dist_protocol)
+        self._exchange_verified.add(key)
+        self.resilience.exchange_verified += 1
+
+    def _dispatch_evaluate(self) -> tuple:
+        """One evaluation attempt on the CURRENT rung -> (phi, dispatch)."""
+        if self.mesh is not None:
+            if os.environ.get("REPRO_VERIFY_EXCHANGE", "") in (
+                    "1", "on", "yes", "true"):
+                self._verify_exchange_once()
+            return self.dist.evaluate(self.dist_protocol), "dist"
+        if self.engine_enabled:
+            return self.engine.evaluate(), "engine"
+        return execute_geometry(self._geo, use_kernels=self.use_kernels,
+                                asarray=self._memo), "reference"
+
+    def _evaluate_resilient(self) -> tuple:
+        """Walk the ladder until a rung produces a (healthy) potential.
+        Transient failures retry in place with backoff; anything else costs
+        one rung.  Terminates: every iteration either returns or strictly
+        descends the finite ladder (`_downgrade` raises at the bottom)."""
+        st = self.resilience
+        while True:
+            rung = self._current_rung()
+            try:
+                phi, dispatch = _rfb.call_with_retry(
+                    self._dispatch_evaluate, site=rung,
+                    policy=st.retry, state=st)
+            except _rfb.ResilienceError:
+                raise                       # already terminal + counted
+            except Exception as exc:
+                self._downgrade(exc)
+                continue
+            if st.health_checks and not self._phi_healthy(phi):
+                exc = RuntimeError(
+                    f"non-finite potential from rung {rung!r}")
+                exc.site = "health.phi"
+                self._downgrade(exc)
+                continue
+            st.rung = rung
+            return phi, dispatch
+
     # ------------------------------------------------------------ kernels -
     def evaluate(self) -> np.ndarray:
         """Run the kernel pipeline now (ignoring the potential cache) against
         memoized device views; refreshes the cached potential.  Dispatches
         through the batched `DeviceEngine` when engine mode is on, else the
-        per-partition reference executor.  The returned array is marked
-        read-only: it is shared by every SessionResult of this geometry
-        version, so in-place mutation would corrupt the cache — copy it to
+        per-partition reference executor.  With `resilience=True` a failing
+        path degrades down `fallback.LADDER` instead of raising (see
+        `_evaluate_resilient`).  The returned array is marked read-only: it
+        is shared by every SessionResult of this geometry version, so
+        in-place mutation would corrupt the cache — copy it to
         post-process."""
         with obs.span("session.evaluate") as sp:
-            if self.mesh is not None:
-                dispatch = "dist"
-                phi = self.dist.evaluate(self.dist_protocol)
-            elif self.engine_enabled:
-                dispatch = "engine"
-                phi = self.engine.evaluate()
+            if self.resilience.enabled:
+                phi, dispatch = self._evaluate_resilient()
             else:
-                dispatch = "reference"
-                phi = execute_geometry(self._geo,
-                                       use_kernels=self.use_kernels,
-                                       asarray=self._memo)
+                phi, dispatch = self._dispatch_evaluate()
             obs.counter_add("session.evaluations")
             if obs.enabled():
                 sp.set({"dispatch": dispatch, "n": int(self._geo.n),
@@ -907,11 +1086,18 @@ class FMMSession:
         if new_x.shape != (geo.n, 3):
             raise ValueError(f"step: expected positions {(geo.n, 3)}, "
                              f"got {new_x.shape}")
+        if not np.isfinite(new_x).all():
+            raise ValueError("new_x: positions contain non-finite values "
+                             "(NaN/Inf); refusing to poison the cached "
+                             "geometry")
         q_unchanged = new_q is None
         new_q = geo.q0 if new_q is None else np.array(new_q, dtype=np.float64)
         if new_q.shape != (geo.n,):
             raise ValueError(f"step: expected charges {(geo.n,)}, "
                              f"got {new_q.shape}")
+        if not np.isfinite(new_q).all():
+            raise ValueError("new_q: charges contain non-finite values "
+                             "(NaN/Inf)")
         q_unchanged = q_unchanged or np.array_equal(new_q, geo.q0)
 
         # Batched device revalidation: a warm engine scores every partition's
@@ -923,13 +1109,43 @@ class FMMSession:
                and self._engine.geo is geo else None)
         use_dev = eng is not None and q_unchanged
         if use_dev:
-            delta, stale = eng.step_drift(new_x)
-            if np.any(stale & (delta > geo.slack - eng.drift_guard)):
+            try:
+                delta, stale = eng.step_drift(new_x)
+            except Exception as exc:
+                if not self.resilience.enabled:
+                    raise
+                # device revalidation died: fall through to the host f64
+                # loop below — same answers, one rung slower, session lives
+                self.resilience.note_fallback(
+                    getattr(exc, "site", "engine.step_drift"),
+                    "device_revalidation", "host", exc)
+                use_dev = False
+            if use_dev and np.any(stale & (delta > geo.slack
+                                           - eng.drift_guard)):
                 # a rebuild is coming OR a drift sits within the f32 guard
                 # band of its slack: recompute drifts exactly (f64) on the
                 # host — rebuild decisions and the conservative LET
                 # re-extraction boxes must not ride f32 rounding
                 use_dev = False
+            if use_dev and self.resilience.health_checks:
+                # Sampled MAC-slack audit: recompute up to 4 partitions'
+                # drifts exactly (host f64) and require the device scores
+                # to agree within the f32 guard band — a silent drift
+                # underestimate is the one failure mode that serves a stale
+                # potential as "cache hit".
+                aud = self.resilience.audits
+                sampled = [j for j in range(P) if len(geo.owners[j])][:4]
+                for j in sampled:
+                    idx = geo.owners[j]
+                    exact = math.sqrt(float(
+                        ((new_x[idx] - geo.x_ref[idx]) ** 2)
+                        .sum(axis=1).max()))
+                    aud["checks"] += 1
+                    if abs(exact - float(delta[j])) > eng.drift_guard:
+                        aud["failures"] += 1
+                        obs.counter_add("resilience.audit_failures")
+                        use_dev = False
+                        break
         if not use_dev:
             if eng is not None:
                 eng.discard_pending()

@@ -428,6 +428,69 @@ class ShardedEngine:
         self._x_pad, self._q_pad = stack_bodies(geometry.trees,
                                                 self.up.n_bodies_max)
 
+    # ------------------------------------------------------- verification --
+    def verify_exchange(self, protocol: str = "bulk") -> int:
+        """Audit one protocol's wire: run pack + exchange (real upward-pass
+        payload, no FMM phases after) returning every rank's pool BOTH
+        before and after the collective, then check word-exact on the host
+        that each inter-rank span landed at its receiver unchanged —
+        `packed[rank(i), off:off+w] == exchanged[rank(j), off:off+w]` for
+        every layout pair (i, j).  Raises `ExchangeVerificationError` on the
+        first corrupted span (resilient sessions treat that as a dist
+        failure and fall back to the single-device engine); returns the
+        number of verified spans.  Triggered by `REPRO_VERIFY_EXCHANGE=1`
+        once per (protocol, geometry version) via the session."""
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as PS
+        from repro.core.engine.upward import batched_upward_kernel
+        from repro.resilience.fallback import ExchangeVerificationError
+
+        ops = self._ops
+        program = self.program(protocol)
+        axis = self.axis
+        Cmax = self.up.n_cells_max
+        ppr = self.layout.parts_per_rank
+        nk = ops.nk
+
+        def rank_verify(x, q, pt, rt, rtabs):
+            M = batched_upward_kernel(
+                ops, x, q, pt["leaves"], pt["leaf_mask"], pt["leaf_centers"],
+                pt["leaf_idx"], pt["leaf_valid"], pt["up_ids"],
+                pt["up_parents"], pt["up_mask"], pt["up_d"], n_cells=Cmax)
+            M_flat = M.reshape(ppr * Cmax, nk)
+            src_vec = jnp.concatenate([M_flat.reshape(-1), x.reshape(-1),
+                                       q.reshape(-1)])
+            pool = rt["pool_template"][0]
+            packed = pool.at[rt["pack_dst"][0]].set(src_vec[rt["pack_src"][0]])
+            exchanged = prog_mod.apply_exchange(packed, program, rtabs, axis)
+            return packed[None], exchanged[None]
+
+        spec = PS(axis)
+        fn = jax.jit(shard_map(
+            rank_verify, mesh=self.mesh, in_specs=(spec,) * 5,
+            out_specs=(spec, spec), check_rep=False))
+        with obs.span("dist.verify_exchange"):
+            packed, exchanged = fn(self._x_pad, self._q_pad, self._part_tabs,
+                                   self._rank_tabs,
+                                   prog_mod.round_tables(program))
+        packed = np.asarray(packed)
+        exchanged = np.asarray(exchanged)
+        lay = self.layout
+        for (i, j) in lay.pairs:
+            off, w = lay.span_off[(i, j)], lay.span_words[(i, j)]
+            ri, rj = int(lay.part_rank[i]), int(lay.part_rank[j])
+            sent = packed[ri, off:off + w]
+            got = exchanged[rj, off:off + w]
+            if not np.array_equal(sent, got):
+                nbad = int((sent != got).sum())
+                raise ExchangeVerificationError(
+                    "dist.exchange.verify",
+                    f"protocol {protocol!r}: span ({i}, {j}) "
+                    f"[rank {ri} -> rank {rj}, {w} words @ {off}] arrived "
+                    f"corrupted: {nbad} mismatched words")
+        obs.counter_add("dist.exchange.verified")
+        return len(lay.pairs)
+
     # ---------------------------------------------------------- benchmark --
     def _build_exchange_fn(self, program: prog_mod.ExchangeProgram):
         """Jitted shard_map program running ONLY pack + exchange (no FMM

@@ -38,6 +38,7 @@ import numpy as np
 from repro.core import hsdx as hsdx_mod
 from repro.core import protocols as proto
 from repro.core.dist.layout import WireLayout
+from repro.resilience import faults as _faults
 
 __all__ = ["DIST_PROTOCOLS", "Round", "ExchangeProgram",
            "build_exchange_program", "rank_schedule", "round_tables",
@@ -230,6 +231,7 @@ def _hsdx(layout: WireLayout, sched: proto.Schedule) -> tuple:
 def build_exchange_program(layout: WireLayout, protocol: str, *,
                            grain_bytes: int | None = None) -> ExchangeProgram:
     """Build (and self-verify) one protocol's collective program."""
+    _faults.fire("dist.build_program")
     sched = rank_schedule(layout, protocol)
     offdiag = layout.rank_bytes.copy()
     np.fill_diagonal(offdiag, 0)

@@ -62,6 +62,7 @@ from repro.core.engine.traversal import (default_traversal_backend,
 from repro.core.engine.upward import batched_upward, batched_upward_kernel
 from repro.core.fmm import device_hook
 from repro.core.multipole import get_operators
+from repro.resilience import faults as _faults
 
 __all__ = ["DeviceEngine", "EngineTables", "BatchedUpwardSchedule",
            "build_engine_tables", "build_batched_upward", "batched_upward",
@@ -353,6 +354,10 @@ class DeviceEngine:
         The threaded-through payload outputs rebind the engine's handles —
         XLA aliases them onto the donated inputs' storage."""
         with obs.span("engine.fused_evaluate") as sp:
+            # simulated-OOM seam: a RESOURCE_EXHAUSTED here is what an
+            # oversubscribed accelerator raises on the entry launch, and
+            # what the resilience ladder downgrades past
+            _faults.fire("fused.launch")
             entry, tabs = self._fused_entry("evaluate")
             xd, qd = self._payload_device()
             phi, M, x_out, q_out = sp.fence(entry(xd, qd, tabs))

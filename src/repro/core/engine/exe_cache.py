@@ -32,6 +32,8 @@ from __future__ import annotations
 from collections import OrderedDict
 
 from repro import obs
+from repro.resilience import fallback as _fb
+from repro.resilience import faults as _faults
 
 __all__ = ["CompiledEntry", "ExecutableCache", "GLOBAL_CACHE",
            "resolve_cache", "DEFAULT_MAXSIZE"]
@@ -83,9 +85,17 @@ class ExecutableCache:
         self.misses = 0
         self.evictions = 0
 
-    def get_or_compile(self, key, compile_fn) -> CompiledEntry:
+    def get_or_compile(self, key, compile_fn,
+                       retry: _fb.RetryPolicy | None = None) -> CompiledEntry:
         """Serve the executable for `key`, compiling via `compile_fn()` (->
-        a `jax.stages.Compiled`) on first sight of the shape class."""
+        a `jax.stages.Compiled`) on first sight of the shape class.
+
+        Failure semantics: a failed compile inserts NOTHING — the cache is
+        never poisoned by a partial entry, and the next call retries from
+        scratch.  TRANSIENT compile errors (a flaky backend; exceptions
+        carrying `transient=True`, e.g. injected ones) are retried in place
+        with deterministic backoff (`resilience.fallback.call_with_retry`)
+        before propagating; deterministic errors propagate on first sight."""
         entry = self._entries.get(key)
         if entry is not None:
             self.hits += 1
@@ -94,12 +104,18 @@ class ExecutableCache:
             return entry
         self.misses += 1
         obs.counter_add("exe_cache.misses")
+
+        def attempt():
+            _faults.fire("exe_cache.compile")
+            return compile_fn()
+
         # the compile-vs-execute split: every XLA compilation this process
         # ever pays appears as one of these spans; entry launches (`calls`)
         # are the execute side
         with obs.span("exe_cache.compile",
                       {"key": str(key)} if obs.enabled() else None):
-            entry = CompiledEntry(key, compile_fn())
+            entry = CompiledEntry(key, _fb.call_with_retry(
+                attempt, site="exe_cache.compile", policy=retry))
         self._entries[key] = entry
         while len(self._entries) > self.maxsize:
             self._entries.popitem(last=False)

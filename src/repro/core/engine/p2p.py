@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fmm import _p2p_vals, device_hook
+from repro.resilience import faults as _faults
 
 __all__ = ["p2p_bucket_vals", "p2p_stream_vals", "p2p_stream_gathered",
            "stream_payload"]
@@ -55,6 +56,7 @@ def p2p_bucket_vals(x, q, bucket, use_kernels: bool = False,
     xt, xs, qs = _gather_bucket(x, q, aa(bucket["t_idx"]), aa(bucket["s_idx"]),
                                 aa(bucket["s_valid"]))
     if use_kernels:
+        _faults.fire("kernels.p2p.launch")
         from repro.kernels.ops import p2p_auto
         vals = p2p_auto(qs, xs, xt, interpret=interpret) \
             * aa(bucket["mask"])[:, None]
@@ -102,6 +104,7 @@ def p2p_stream_vals(x, q, stream: dict, *, use_kernels: bool,
     payload = stream_payload(x, q, stream["pad"])
     meta = aa(stream["meta"])
     if use_kernels:
+        _faults.fire("kernels.p2p.launch")
         from repro.kernels import ops as kops
         from repro.kernels.p2p_stream import p2p_stream
         interp = kops.INTERPRET if interpret is None else bool(interpret)

@@ -42,6 +42,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.plan import bucket_size
+from repro.resilience import faults as _faults
 
 __all__ = ["BatchedUpwardSchedule", "EngineTables", "build_batched_upward",
            "build_engine_tables", "build_p2p_stream_tables", "stack_bodies",
@@ -244,6 +245,7 @@ def build_p2p_stream_tables(p2p_buckets, block_t: int) -> dict | None:
     of one shape class share one compiled program), n_live_tiles, and pad
     (payload zero-padding rows so fixed-size slab DMAs never read past the
     end: max(smax, block_t))."""
+    _faults.fire("p2p.stream.tables")
     if not p2p_buckets:
         return None
     metas = []

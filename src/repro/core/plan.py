@@ -85,6 +85,19 @@ measured exchange time against the LogGP prediction (`model_drift`).
 Disabled — the default — it costs one global load per call site;
 `FMMSession.report()` and `Tracer.to_chrome_trace()` are the read side.
 
+Also cross-cutting is the resilience tier (`repro.resilience`): named fault
+seams threaded through the stack (`faults.fire(site)` — autotune cache I/O,
+XLA compilation, stream-table build, Pallas launches, memo uploads, exchange
+-program builds, fused launches) and a degradation ladder the session walks
+when a rung fails (`fallback.LADDER`): dist exchange -> streaming Pallas ->
+gathered Pallas -> XLA slab -> per-phase engine -> host f64 reference.
+Transient failures retry with deterministic backoff; every downgrade is
+ledgered (`resilience.fallback` counters, warn-once, the `degraded` flag in
+`report()["resilience"]`); ladder exhaustion raises a typed
+`ResilienceError` naming the failing site.  Like obs, disabled costs one
+global load + None test per seam (`REPRO_FAULTS=` / `REPRO_RESILIENCE=` /
+`FMMSession(resilience=...)` are the switches).
+
 Streaming vs gathered P2P.  The engine evaluates the near field one of two
 ways.  The *gathered* path (`engine/p2p.p2p_bucket_vals`) materializes each
 width-class bucket's `(pairs, S, 3)`/`(pairs, S)` operands via XLA gathers

@@ -30,6 +30,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.resilience import faults as _faults
+from repro.resilience.faults import InjectedFault as _InjectedFault
+
 TB = 128                        # default target block (lane-aligned)
 BLOCK_CANDIDATES = (128, 256, 512)
 STREAM_BUFFER_CANDIDATES = (2, 3)   # double vs triple buffering (p2p_stream)
@@ -68,6 +71,7 @@ _STREAM_CACHE: dict[tuple[int, int, int], tuple[int, int]] = {}
 # touches the disk again — a mid-benchmark run must not crash or spam.
 _PERSIST_LOADED = False
 _PERSIST_BROKEN = False
+_QUARANTINED = False
 _SCHEMA_VERSION = 2
 
 
@@ -77,12 +81,39 @@ def _cache_io_failed(action: str, exc: BaseException) -> None:
     if _PERSIST_BROKEN:
         return
     _PERSIST_BROKEN = True
+    from repro.resilience import fallback as _fb
+    _fb.record_fallback(f"p2p.cache.{action}", "disk_cache", "in_memory",
+                        warn=False)      # the warning below is the warn-once
     import warnings
     warnings.warn(
         f"p2p autotune cache disabled: could not {action} "
         f"{_persist_path()!r} ({exc!r}); continuing with the in-memory "
         f"cache only (set REPRO_P2P_CACHE_PATH to a writable location or "
         f"REPRO_P2P_CACHE=0 to silence)", RuntimeWarning, stacklevel=3)
+
+
+def _quarantine_corrupt(exc: BaseException) -> None:
+    """Corrupt/truncated cache JSON: move the file aside (quarantine) so the
+    next save rebuilds a clean one, warn ONCE, and keep running — a damaged
+    cache file must never take a session down (it is an optimization, not a
+    correctness dependency).  Distinct from `_cache_io_failed`: the location
+    is still usable, so persistence stays ON and rebuilds."""
+    global _QUARANTINED
+    path = _persist_path()
+    try:
+        os.replace(path, path + ".corrupt")
+    except OSError:
+        pass                             # racing process already moved it
+    from repro import obs
+    obs.counter_add("p2p.cache.quarantined")
+    if _QUARANTINED:
+        return
+    _QUARANTINED = True
+    import warnings
+    warnings.warn(
+        f"p2p autotune cache {path!r} is corrupt ({exc!r}); quarantined to "
+        f"{path + '.corrupt'!r} and rebuilding from scratch (warns once)",
+        RuntimeWarning, stacklevel=3)
 
 
 def _persist_enabled() -> bool:
@@ -122,13 +153,16 @@ def _load_persisted(backend: str) -> None:
         return
     _PERSIST_LOADED = True
     try:
+        _faults.fire("p2p.cache.read")
         with open(_persist_path()) as f:
             data = json.load(f)
     except FileNotFoundError:
         return                       # cold cache: normal, silent
-    except ValueError:
-        return                       # corrupt file: the next save rewrites it
-    except OSError as exc:           # unreadable location: warn once, degrade
+    except ValueError as exc:        # corrupt/truncated JSON: quarantine it
+        _quarantine_corrupt(exc)
+        return
+    except (OSError, _InjectedFault) as exc:
+        # unreadable location (or injected read fault): warn once, degrade
         _cache_io_failed("read", exc)
         return
     for k, v in _parse_entries(data).get(backend, {}).items():
@@ -156,11 +190,15 @@ def _save_persisted(backend: str, key_str: str, value) -> None:
     the cache is an optimization, never a correctness dependency."""
     path = _persist_path()
     try:
+        _faults.fire("p2p.cache.write")
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         try:
             with open(path) as f:
                 entries = _parse_entries(json.load(f))
-        except (OSError, ValueError):
+        except OSError:
+            entries = {}
+        except ValueError as exc:    # corrupt on the read-merge: quarantine
+            _quarantine_corrupt(exc)
             entries = {}
         entries.setdefault(backend, {})[key_str] = value
         tmp = f"{path}.{os.getpid()}.tmp"
@@ -168,7 +206,7 @@ def _save_persisted(backend: str, key_str: str, value) -> None:
             json.dump({"version": _SCHEMA_VERSION, "entries": entries},
                       f, indent=1, sort_keys=True)
         os.replace(tmp, path)
-    except OSError as exc:
+    except (OSError, _InjectedFault) as exc:
         _cache_io_failed("write", exc)
 
 

@@ -1,0 +1,27 @@
+"""Resilience tier: fault injection, retry/backoff, degradation ladder.
+
+Two halves, both zero-overhead when idle (the obs tier's no-op-singleton
+discipline, tracemalloc-pinned):
+
+  `faults`   — named injection sites at the stack's real failure seams,
+               armed via `inject_faults(...)` or `REPRO_FAULTS=`; disarmed,
+               each seam costs one module-global load.
+  `fallback` — the `streaming -> gathered -> xla_slab -> per_phase ->
+               reference` ladder (plus `dist -> single-device`), bounded
+               retry with deterministic backoff, and the process ledgers
+               `analysis.check_counters` reconciles against fired faults.
+
+Enable on a session with `FMMSession(..., resilience=True)` (or
+`REPRO_RESILIENCE=1`); inspect via `session.report()["resilience"]`.
+"""
+from repro.resilience.faults import (InjectedFault, InjectedResourceExhausted,
+                                     SITES, fire, inject_faults)
+from repro.resilience.fallback import (LADDER, ExchangeVerificationError,
+                                       ResilienceError, ResilienceState,
+                                       RetryPolicy, call_with_retry,
+                                       default_resilience_enabled)
+
+__all__ = ["SITES", "LADDER", "InjectedFault", "InjectedResourceExhausted",
+           "ResilienceError", "ExchangeVerificationError", "ResilienceState",
+           "RetryPolicy", "inject_faults", "fire", "call_with_retry",
+           "default_resilience_enabled"]

@@ -1,19 +1,29 @@
-"""Shared fixtures: observability isolation.
+"""Shared fixtures: observability + resilience isolation.
 
 The obs subsystem is process-global (module-level tracer + GLOBAL_METRICS),
 so counter assertions in one test would see another test's increments
 without this autouse reset — tracing is forced off and all recorded
-spans/metrics dropped around every test.
+spans/metrics dropped around every test.  The resilience tier keeps the
+same kind of process-global state (the armed fault plan and the
+fallback/typed-error/retry ledgers), reset the same way.
 """
 import pytest
 
 from repro import obs
+from repro.resilience import fallback as _res_fb
+from repro.resilience import faults as _res_faults
 
 
 @pytest.fixture(autouse=True)
 def _obs_isolation():
     obs.configure(enabled=False)
     obs.reset()
+    _res_faults.disarm()
+    _res_faults.reset_stats()
+    _res_fb.reset_ledger()
     yield
     obs.configure(enabled=False)
     obs.reset()
+    _res_faults.disarm()
+    _res_faults.reset_stats()
+    _res_fb.reset_ledger()

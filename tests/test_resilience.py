@@ -1,0 +1,572 @@
+"""Chaos suite for the resilience tier (ISSUE 10).
+
+Each registered fault site is fired exactly once against a session whose
+knobs make that seam load-bearing, and the test asserts the PRECISE
+consequence: either phi still lands within the engine-parity tolerance via
+a counted ladder fallback, or a typed `ResilienceError` naming the site
+surfaces.  Plus: retry/backoff with an injectable clock, cache corruption
+quarantine, input validation, the report surface, and the two performance
+pins (disabled-mode fire() allocates nothing; resilience armed with no
+faults leaves the warm fused one-launch contract intact).
+"""
+import json
+import os
+import subprocess
+import sys
+import tracemalloc
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.api import FMMSession, PartitionSpec, plan_geometry
+from repro.resilience import fallback as res_fb
+from repro.resilience import faults as res_faults
+from repro.resilience import (ExchangeVerificationError, InjectedFault,
+                              InjectedResourceExhausted, ResilienceError,
+                              RetryPolicy, call_with_retry, inject_faults)
+
+RTOL, ATOL = 1e-6, 2e-5
+
+
+def _problem(n=192, nparts=4, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-1.0, 1.0, size=(n, 3))
+    q = rng.uniform(0.1, 1.0, size=n)
+    return x, q, PartitionSpec(nparts=nparts, ncrit=48)
+
+
+@pytest.fixture(scope="module")
+def reference_phi():
+    x, q, spec = _problem()
+    sess = FMMSession.from_points(x, q, spec, engine=False)
+    return np.asarray(sess.evaluate(), np.float64)
+
+
+# --------------------------------------------------------------- matrix ---
+# site -> session knobs that make the seam load-bearing on CPU.  Each case
+# fires the site once; the resilient session must land one rung lower and
+# still produce a parity-tolerance phi with exactly one counted fallback.
+MATRIX = {
+    "memo.upload": dict(engine=True, fused=False, use_kernels=False,
+                        p2p_stream=False),
+    "exe_cache.compile": dict(engine=True, fused=True, use_kernels=False,
+                              p2p_stream=False),
+    "fused.launch": dict(engine=True, fused=True, use_kernels=False,
+                         p2p_stream=False),
+    "p2p.stream.tables": dict(engine=True, fused=False, use_kernels=False,
+                              p2p_stream=True),
+    "kernels.p2p.launch": dict(engine=True, fused=False, use_kernels=True,
+                               p2p_stream=False),
+}
+
+
+@pytest.mark.parametrize("site", sorted(MATRIX))
+def test_chaos_matrix_fallback_preserves_phi(site, reference_phi):
+    x, q, spec = _problem()
+    sess = FMMSession.from_points(x, q, spec, resilience=True,
+                                  **MATRIX[site])
+    rung_before = sess._current_rung()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        with inject_faults(site):
+            phi = sess.evaluate()
+    st = sess.resilience
+    assert st.degraded
+    assert len(st.fallbacks) == 1
+    assert st.fallbacks[0]["site"] == site
+    assert st.fallbacks[0]["from"] == rung_before
+    assert res_faults.fired_counts() == {site: 1}
+    assert res_fb.ledger_counts()["fallbacks"] == {site: 1}
+    np.testing.assert_allclose(phi, reference_phi, rtol=RTOL, atol=ATOL)
+
+
+def test_chaos_dist_build_program_falls_back_to_engine(reference_phi):
+    from repro.launch.mesh import host_device_mesh
+    x, q, spec = _problem()
+    mesh = host_device_mesh(1)
+    sess = FMMSession.from_points(x, q, spec, mesh=mesh, resilience=True,
+                                  engine=True, fused=False,
+                                  use_kernels=False, p2p_stream=False)
+    assert sess._current_rung() == "dist"
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        with inject_faults("dist.build_program"):
+            phi = sess.evaluate()
+    st = sess.resilience
+    assert st.degraded and st.fallbacks[0]["from"] == "dist"
+    assert sess.mesh is None and sess._dist is None
+    assert st.rung != "dist"
+    np.testing.assert_allclose(phi, reference_phi, rtol=RTOL, atol=ATOL)
+
+
+def test_ladder_walks_multiple_rungs(reference_phi):
+    # streaming -> (kernel launch fault) -> gathered -> (again) -> xla_slab
+    x, q, spec = _problem()
+    sess = FMMSession.from_points(x, q, spec, resilience=True, engine=True,
+                                  fused=False, use_kernels=True,
+                                  p2p_stream=True)
+    assert sess._current_rung() == "streaming"
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        with inject_faults({"kernels.p2p.launch": {"count": 2}}):
+            phi = sess.evaluate()
+    transitions = [(f["from"], f["to"]) for f in sess.resilience.fallbacks]
+    assert transitions == [("streaming", "gathered"), ("gathered", "xla_slab")]
+    assert sess.resilience.rung == "xla_slab"
+    np.testing.assert_allclose(phi, reference_phi, rtol=RTOL, atol=ATOL)
+
+
+def test_ladder_exhaustion_raises_typed_error():
+    x, q, spec = _problem(n=96, nparts=2)
+    # reference rung still uploads through the memo: an unlimited fault
+    # there leaves nowhere to go
+    sess = FMMSession.from_points(x, q, spec, resilience=True, engine=False)
+    assert sess._current_rung() == "reference"
+    with pytest.raises(ResilienceError) as ei:
+        with inject_faults({"memo.upload": {"count": None}}):
+            sess.evaluate()
+    assert ei.value.site == "memo.upload"
+    assert res_fb.ledger_counts()["typed_errors"] == {"memo.upload": 1}
+
+
+def test_without_resilience_faults_propagate():
+    x, q, spec = _problem(n=96, nparts=2)
+    sess = FMMSession.from_points(x, q, spec, engine=False)  # default: off
+    with pytest.raises(InjectedFault):
+        with inject_faults("memo.upload"):
+            sess.evaluate()
+    assert not sess.resilience.enabled
+
+
+def test_accounting_identity_across_matrix():
+    # every fired fault is a counted fallback or a typed error — the
+    # check_counters gate, asserted in-process across a mixed run
+    x, q, spec = _problem(n=96, nparts=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        s1 = FMMSession.from_points(x, q, spec, resilience=True,
+                                    engine=True, fused=True,
+                                    use_kernels=False, p2p_stream=False)
+        with inject_faults("fused.launch"):
+            s1.evaluate()
+        s2 = FMMSession.from_points(x, q, spec, resilience=True,
+                                    engine=False)
+        with pytest.raises(ResilienceError):
+            with inject_faults({"memo.upload": {"count": None}}):
+                s2.evaluate()
+    fired = res_faults.fired_total()
+    assert fired >= 2
+    assert fired == res_fb.fallback_total() + res_fb.typed_error_total()
+
+
+# ---------------------------------------------------------------- retry ---
+def test_transient_faults_retry_with_deterministic_backoff(reference_phi):
+    delays = []
+    x, q, spec = _problem()
+    sess = FMMSession.from_points(x, q, spec, resilience=True, engine=True,
+                                  fused=False, use_kernels=False,
+                                  p2p_stream=False)
+    sess.resilience.retry = RetryPolicy(max_retries=2, base_delay=0.05,
+                                        max_delay=1.0, sleep=delays.append)
+    with inject_faults({"memo.upload": {"count": 2, "transient": True}}):
+        phi = sess.evaluate()
+    assert delays == [0.05, 0.1]            # base * 2**k, injectable clock
+    assert sess.resilience.retries == 2
+    assert not sess.resilience.degraded     # retried in place, no downgrade
+    assert res_fb.retry_total() == 2
+    np.testing.assert_allclose(phi, reference_phi, rtol=RTOL, atol=ATOL)
+
+
+def test_call_with_retry_gives_up_after_budget():
+    calls = []
+
+    def always_fails():
+        calls.append(1)
+        raise InjectedFault("exe_cache.compile", transient=True)
+
+    with pytest.raises(InjectedFault):
+        call_with_retry(always_fails, site="exe_cache.compile",
+                        policy=RetryPolicy(max_retries=2,
+                                           sleep=lambda s: None))
+    assert len(calls) == 3                  # initial + 2 retries
+
+
+def test_retry_delay_caps_at_max():
+    p = RetryPolicy(max_retries=8, base_delay=0.05, max_delay=0.15)
+    assert [p.delay(k) for k in range(4)] == [0.05, 0.1, 0.15, 0.15]
+
+
+def test_non_transient_never_retries():
+    calls = []
+
+    def fails():
+        calls.append(1)
+        raise InjectedFault("fused.launch")     # transient=False
+
+    with pytest.raises(InjectedFault):
+        call_with_retry(fails, site="fused.launch",
+                        policy=RetryPolicy(sleep=lambda s: None))
+    assert len(calls) == 1
+
+
+# ------------------------------------------------------- cache hardening --
+@pytest.fixture
+def p2p_cache_sandbox(monkeypatch, tmp_path):
+    from repro.kernels import p2p as kp
+    path = tmp_path / "p2p_cache.json"
+    monkeypatch.setenv("REPRO_P2P_CACHE_PATH", str(path))
+    monkeypatch.setenv("REPRO_P2P_CACHE", "1")
+    monkeypatch.setattr(kp, "_BLOCK_CACHE", {})
+    monkeypatch.setattr(kp, "_STREAM_CACHE", {})
+    monkeypatch.setattr(kp, "_PERSIST_LOADED", False)
+    monkeypatch.setattr(kp, "_PERSIST_BROKEN", False)
+    monkeypatch.setattr(kp, "_QUARANTINED", False)
+    return kp, path
+
+
+def test_corrupt_cache_quarantined_warn_once(p2p_cache_sandbox):
+    kp, path = p2p_cache_sandbox
+    path.write_text('{"version": 2, "entries": {"cpu": {TRUNCATED')
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        kp._load_persisted("cpu")           # must NOT raise JSONDecodeError
+        kp._PERSIST_LOADED = False
+        kp._load_persisted("cpu")           # second sight: silent
+    quarantine_warns = [m for m in w if "corrupt" in str(m.message)]
+    assert len(quarantine_warns) == 1
+    assert os.path.exists(str(path) + ".corrupt")
+    assert not kp._PERSIST_BROKEN           # location usable: persistence ON
+    # the next save rebuilds a clean file at the same path
+    kp._save_persisted("cpu", "64,4,128", 128)
+    data = json.loads(path.read_text())
+    assert data["entries"]["cpu"]["64,4,128"] == 128
+
+
+def test_corrupt_cache_on_save_merge_quarantines(p2p_cache_sandbox):
+    kp, path = p2p_cache_sandbox
+    path.write_text("not json at all")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        kp._save_persisted("cpu", "64,4,128", 256)
+    assert any("corrupt" in str(m.message) for m in w)
+    assert json.loads(path.read_text())["entries"]["cpu"]["64,4,128"] == 256
+
+
+@pytest.mark.parametrize("site,action", [("p2p.cache.read", "read"),
+                                         ("p2p.cache.write", "write")])
+def test_injected_cache_io_fault_absorbed_locally(p2p_cache_sandbox, site,
+                                                 action):
+    kp, path = p2p_cache_sandbox
+    path.write_text('{"version": 2, "entries": {}}')
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        with inject_faults(site):
+            if action == "read":
+                kp._load_persisted("cpu")
+            else:
+                kp._save_persisted("cpu", "64,4,128", 128)
+    assert kp._PERSIST_BROKEN               # degraded to in-memory-only
+    assert len([m for m in w if issubclass(m.category, RuntimeWarning)]) == 1
+    # absorbed locally (ledgered), never escalated to a typed error
+    assert res_fb.ledger_counts()["fallbacks"] == {site: 1}
+    assert res_fb.typed_error_total() == 0
+    assert res_faults.fired_counts() == {site: 1}
+
+
+# ----------------------------------------------------------- validation ---
+def test_plan_geometry_rejects_bad_inputs():
+    x, q, spec = _problem(n=32, nparts=2)
+    with pytest.raises(ValueError, match="x: expected positions"):
+        plan_geometry(np.zeros((8, 2)), np.ones(8), spec)
+    with pytest.raises(ValueError, match="x: at least one body"):
+        plan_geometry(np.zeros((0, 3)), np.zeros(0), spec)
+    with pytest.raises(ValueError, match="q: expected charges"):
+        plan_geometry(x, q[:-1], spec)
+    bad = x.copy()
+    bad[3, 1] = np.nan
+    with pytest.raises(ValueError, match="x: positions contain non-finite"):
+        plan_geometry(bad, q, spec)
+    bad_q = q.copy()
+    bad_q[0] = np.inf
+    with pytest.raises(ValueError, match="q: charges contain non-finite"):
+        plan_geometry(x, bad_q, spec)
+    with pytest.raises(ValueError, match="theta: MAC opening angle"):
+        plan_geometry(x, q, PartitionSpec(nparts=2, theta=-0.5))
+    with pytest.raises(ValueError, match="theta"):
+        plan_geometry(x, q, PartitionSpec(nparts=2, theta=float("nan")))
+
+
+def test_session_rejects_non_plan_geometry():
+    with pytest.raises(ValueError, match="geometry: expected a GeometryPlan"):
+        FMMSession(np.zeros((4, 3)))
+
+
+def test_step_rejects_non_finite_updates():
+    x, q, spec = _problem(n=64, nparts=2)
+    sess = FMMSession.from_points(x, q, spec, engine=False)
+    bad = x.copy()
+    bad[5, 0] = np.nan
+    with pytest.raises(ValueError, match="new_x: positions contain"):
+        sess.step(bad)
+    bad_q = q.copy()
+    bad_q[1] = -np.inf
+    with pytest.raises(ValueError, match="new_q: charges contain"):
+        sess.step(x, bad_q)
+
+
+def test_empty_partition_sentinel_still_works():
+    # n < nparts leaves empty partitions: the inf/-inf box sentinel path —
+    # deliberately NOT rejected by validation (clustered problems do this)
+    rng = np.random.default_rng(3)
+    x = rng.uniform(size=(5, 3))
+    q = rng.uniform(0.1, 1.0, size=5)
+    sess = FMMSession.from_points(x, q, PartitionSpec(nparts=8, ncrit=16),
+                                  engine=False)
+    phi = sess.evaluate()
+    ref = FMMSession.from_points(x, q, PartitionSpec(nparts=1, ncrit=16),
+                                 engine=False).evaluate()
+    assert np.isfinite(phi).all()
+    np.testing.assert_allclose(phi, ref, rtol=RTOL, atol=ATOL)
+
+
+# ------------------------------------------------------ health sentinels --
+def test_health_check_catches_nan_phi(reference_phi, monkeypatch):
+    from repro.core import engine as eng_mod
+    x, q, spec = _problem()
+    sess = FMMSession.from_points(x, q, spec, resilience=True,
+                                  health_checks=True, engine=True,
+                                  fused=False, use_kernels=False,
+                                  p2p_stream=False)
+    monkeypatch.setattr(
+        eng_mod.DeviceEngine, "evaluate",
+        lambda self: np.full(sess.geometry.n, np.nan), raising=True)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        phi = sess.evaluate()
+    st = sess.resilience
+    assert st.health["failures"] >= 1
+    assert st.degraded and st.fallbacks[0]["site"] == "health.phi"
+    assert st.rung == "reference"
+    np.testing.assert_allclose(phi, reference_phi, rtol=RTOL, atol=ATOL)
+
+
+def test_health_check_passes_clean_run():
+    x, q, spec = _problem(n=96, nparts=2)
+    sess = FMMSession.from_points(x, q, spec, resilience=True,
+                                  health_checks=True, engine=False)
+    sess.evaluate()
+    st = sess.resilience
+    assert st.health == {"checks": 1, "failures": 0}
+    assert not st.degraded
+
+
+def test_step_drift_failure_degrades_to_host_revalidation():
+    x, q, spec = _problem()
+    sess = FMMSession.from_points(x, q, spec, resilience=True, engine=True,
+                                  fused=False, use_kernels=False,
+                                  p2p_stream=False)
+    phi0 = sess.evaluate()
+    eng = sess.engine
+    assert eng is not None
+
+    def boom(new_x):
+        raise RuntimeError("device revalidation died")
+
+    eng.step_drift = boom
+    eng.discard_pending = lambda: None
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        rep = sess.step(x + 1e-7)           # tiny within-slack drift
+    assert sess.resilience.degraded
+    fb = sess.resilience.fallbacks[0]
+    assert (fb["from"], fb["to"]) == ("device_revalidation", "host")
+    assert rep.version == sess.geometry.version
+    phi1 = sess.evaluate()
+    np.testing.assert_allclose(phi1, phi0, rtol=1e-5, atol=1e-4)
+
+
+# ------------------------------------------------------------- report -----
+def test_report_resilience_block():
+    x, q, spec = _problem(n=96, nparts=2)
+    sess = FMMSession.from_points(x, q, spec, resilience=True, engine=False)
+    sess.evaluate()
+    blk = sess.report()["resilience"]
+    assert blk["enabled"] is True
+    assert blk["degraded"] is False
+    assert blk["rung"] == "reference"
+    assert blk["fallbacks"] == []
+    assert set(blk) >= {"retries", "health", "audits", "exchange_verified",
+                        "health_checks"}
+
+
+# ------------------------------------------------------------ env / spec --
+def test_parse_spec_grammar():
+    spec = res_faults.parse_spec(
+        "memo.upload, exe_cache.compile:3, fused.launch:*:0.5")
+    assert spec["memo.upload"] == {}
+    assert spec["exe_cache.compile"] == {"count": 3}
+    assert spec["fused.launch"] == {"count": None, "prob": 0.5}
+    with pytest.raises(ValueError, match="unknown fault site"):
+        res_faults.parse_spec("no.such.site")
+    with pytest.raises(ValueError, match="malformed"):
+        res_faults.parse_spec("memo.upload:1:0.5:oops")
+
+
+def test_env_arming(monkeypatch):
+    monkeypatch.setenv("REPRO_FAULTS", "memo.upload:2")
+    res_faults._arm_from_env()
+    try:
+        assert res_faults.active_plan() is not None
+        with pytest.raises(InjectedFault):
+            res_faults.fire("memo.upload")
+    finally:
+        res_faults.disarm()
+
+
+def test_probabilistic_plan_is_seed_deterministic():
+    def run(seed):
+        fired = 0
+        with inject_faults({"memo.upload": {"count": None, "prob": 0.5}},
+                           seed=seed):
+            for _ in range(64):
+                try:
+                    res_faults.fire("memo.upload")
+                except InjectedFault:
+                    fired += 1
+        res_faults.reset_stats()
+        return fired
+
+    a, b = run(7), run(7)
+    assert a == b and 0 < a < 64
+
+
+def test_nested_arming_rejected():
+    with inject_faults("memo.upload"):
+        with pytest.raises(RuntimeError, match="already armed"):
+            with inject_faults("fused.launch"):
+                pass
+
+
+def test_fused_launch_fault_is_resource_exhausted():
+    with pytest.raises(InjectedResourceExhausted, match="RESOURCE_EXHAUSTED"):
+        with inject_faults("fused.launch"):
+            res_faults.fire("fused.launch")
+
+
+def test_default_resilience_env(monkeypatch):
+    x, q, spec = _problem(n=32, nparts=2)
+    monkeypatch.setenv("REPRO_RESILIENCE", "1")
+    assert FMMSession.from_points(x, q, spec).resilience.enabled
+    monkeypatch.setenv("REPRO_RESILIENCE", "0")
+    assert not FMMSession.from_points(x, q, spec).resilience.enabled
+
+
+# ------------------------------------------------------ performance pins --
+def test_disabled_fire_allocates_nothing():
+    res_faults.disarm()
+    for _ in range(100):                    # warm any lazy state
+        res_faults.fire("memo.upload")
+    tracemalloc.start()
+    base = tracemalloc.take_snapshot()
+    for _ in range(10_000):
+        res_faults.fire("memo.upload")
+    peak = tracemalloc.get_traced_memory()[1]
+    tracemalloc.stop()
+    del base
+    assert peak < 8192, f"disabled fire() allocated {peak} bytes over 10k calls"
+
+
+def test_warm_fused_one_launch_with_resilience_enabled():
+    import jax
+    from repro.analysis.hlo_walk import count_entry_launches
+    from repro.core.engine.exe_cache import ExecutableCache
+    x, q, spec = _problem()
+    sess = FMMSession.from_points(x, q, spec, resilience=True, engine=True,
+                                  fused=True, use_kernels=False,
+                                  p2p_stream=False,
+                                  exe_cache=ExecutableCache())
+    sess.evaluate()
+    sess.evaluate()
+    entry, _tabs = sess.engine._entries[("evaluate",
+                                         bool(jax.config.jax_enable_x64))]
+    assert count_entry_launches(entry.hlo_text) == 1
+    assert not sess.resilience.degraded
+
+
+# ----------------------------------------------- multi-device subprocess --
+_DIST_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import warnings
+import numpy as np
+from repro.core.api import FMMSession, PartitionSpec
+from repro.launch.mesh import host_device_mesh
+from repro.resilience import inject_faults
+
+rng = np.random.default_rng(5)
+x = rng.uniform(-1.0, 1.0, size=(256, 3))
+q = rng.uniform(0.1, 1.0, size=256)
+spec = PartitionSpec(nparts=8, ncrit=48)
+
+ref = FMMSession.from_points(x, q, spec, engine=False).evaluate()
+
+# 1. exchange verification on a real 4-rank mesh: every span word-exact
+sess = FMMSession.from_points(x, q, spec, mesh=host_device_mesh(4),
+                              engine=True, fused=False, use_kernels=False,
+                              p2p_stream=False)
+for protocol in ("bulk", "grain", "hsdx"):
+    n_spans = sess.dist.verify_exchange(protocol)
+    assert n_spans > 0, protocol
+
+# 2. REPRO_VERIFY_EXCHANGE session hook: verified once per (proto, version)
+os.environ["REPRO_VERIFY_EXCHANGE"] = "1"
+sess.evaluate(); sess.evaluate()
+assert sess.resilience.exchange_verified == 1
+del os.environ["REPRO_VERIFY_EXCHANGE"]
+
+# 3. corrupted wire -> ExchangeVerificationError naming the span
+from repro.core.dist import engine as dist_eng
+from repro.core.dist import programs as prog_mod
+from repro.resilience import ExchangeVerificationError
+real_apply = prog_mod.apply_exchange
+def corrupt_apply(pool, program, rtabs, axis):
+    out = real_apply(pool, program, rtabs, axis)
+    return out.at[0].add(1.0)  # flip a word in every rank's pool
+prog_mod.apply_exchange = corrupt_apply
+sess2 = FMMSession.from_points(x, q, spec, mesh=host_device_mesh(4))
+try:
+    sess2.dist.verify_exchange("bulk")
+    raise SystemExit("corrupted exchange was not detected")
+except ExchangeVerificationError as e:
+    assert e.site == "dist.exchange.verify"
+prog_mod.apply_exchange = real_apply
+
+# 4. dist failure -> single-device fallback, phi parity kept
+sess3 = FMMSession.from_points(x, q, spec, mesh=host_device_mesh(4),
+                               resilience=True, engine=True, fused=False,
+                               use_kernels=False, p2p_stream=False)
+assert sess3._current_rung() == "dist"
+with warnings.catch_warnings():
+    warnings.simplefilter("ignore", RuntimeWarning)
+    with inject_faults("dist.build_program"):
+        phi = sess3.evaluate()
+st = sess3.resilience
+assert st.degraded and st.fallbacks[0]["from"] == "dist"
+assert st.fallbacks[0]["site"] == "dist.build_program"
+assert sess3.mesh is None
+np.testing.assert_allclose(phi, ref, rtol=1e-6, atol=2e-5)
+print("DIST-RESILIENCE-OK")
+"""
+
+
+def test_dist_verify_and_fallback_subprocess():
+    env = dict(os.environ,
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(os.path.dirname(__file__), "..", "src")]
+                   + os.environ.get("PYTHONPATH", "").split(os.pathsep)))
+    env.pop("REPRO_FAULTS", None)
+    proc = subprocess.run([sys.executable, "-c", _DIST_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr
+    assert "DIST-RESILIENCE-OK" in proc.stdout
